@@ -1,0 +1,81 @@
+"""Paper Fig. 12: dense tensor — binary blob vs FTSF.
+
+Scenario 1 (§V.A): FFHQ-like (N, 3, H, W) uint8 tensor. Baseline = one
+serialized blob in the object store (numpy.save analog: raw C-order bytes).
+FTSF = 3-D chunks (one per image) in the delta table. Metrics: storage
+size, write, read-tensor, read-slice X[0:100] — compression ratio Cr and
+the slice-read speedup are the paper's headline numbers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.paper_store import PAPER_STORE
+from repro.core import DeltaTensorStore
+from repro.data.synthetic import ffhq_like
+
+from .common import fresh_store, row, timed
+
+
+def run(shape=None, repeats=None):
+    cfgd = PAPER_STORE["dense"]
+    shape = shape or cfgd["bench_shape"]
+    repeats = repeats or PAPER_STORE["repeats"]
+    x = ffhq_like(shape)
+    # paper slice is X[0:100] of 5000 images = 2% of the first dim
+    sl_lo = 0
+    sl_hi = max(1, int(shape[0] * 100 / 5000))
+
+    out = []
+
+    # --- binary baseline -----------------------------------------------------
+    obj, lm = fresh_store()
+    blob = x.tobytes()
+    w = timed(lm, lambda: obj.put("blobs/x", x.tobytes()), repeats)
+    size_binary = obj.head("blobs/x")
+
+    def read_all_binary():
+        raw = obj.get("blobs/x")
+        np.frombuffer(raw, dtype=x.dtype).reshape(shape)
+
+    r = timed(lm, read_all_binary, repeats)
+
+    def read_slice_binary():  # must fetch the whole blob to slice it
+        raw = obj.get("blobs/x")
+        np.frombuffer(raw, dtype=x.dtype).reshape(shape)[sl_lo:sl_hi]
+
+    s = timed(lm, read_slice_binary, repeats)
+    out.append(("binary", size_binary, w, r, s))
+
+    # --- FTSF ------------------------------------------------------------------
+    obj, lm = fresh_store()
+    store = DeltaTensorStore(obj, "tensors")
+    w2 = timed(lm, lambda: store.put(x, layout="ftsf", tensor_id="x",
+                                     chunk_dims=cfgd["chunk_dims"],
+                                     target_file_bytes=512 << 10,
+                                     overwrite=True), repeats)
+    size_ftsf = store.tensor_bytes("x")
+    r2 = timed(lm, lambda: store.get("x"), repeats)
+    s2 = timed(lm, lambda: store.get_slice("x", [(sl_lo, sl_hi)]), repeats)
+    out.append(("ftsf", size_ftsf, w2, r2, s2))
+
+    cr = size_ftsf / size_binary
+    lines = []
+    for name, size, w_, r_, s_ in out:
+        lines.append(row(f"dense_{name}_write", w_.total_s * 1e6,
+                         f"size_bytes={size}"))
+        lines.append(row(f"dense_{name}_read_tensor", r_.total_s * 1e6,
+                         f"io_s={r_.io_s:.3f}"))
+        lines.append(row(f"dense_{name}_read_slice", s_.total_s * 1e6,
+                         f"bytes_moved={s_.bytes_moved}"))
+    slice_delta = out[1][4].total_s / out[0][4].total_s - 1
+    lines.append(row("dense_ftsf_summary", 0.0,
+                     f"Cr={cr:.4f} (paper 0.9109); "
+                     f"slice_delta={slice_delta:+.2%} (paper -90.04%)"))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,117 @@
+"""Paper Figs. 13-16: sparse tensor — COO/CSR/CSF/BSGS vs the PT baseline.
+
+Scenario 2 (§V.B): Uber-pickups-like 4-D sparse tensor (0.038% nnz).
+Baseline "PT" = the torch.save analog: one blob holding raw COO arrays
+(int64 indices + values + shape), which is what a .pt of a
+sparse_coo_tensor contains. Each proposed format stores through the delta
+table. Metrics per format: storage size (Fig. 13), write time (Fig. 14),
+read-tensor time (Fig. 15), read-slice X[i] time (Fig. 16).
+"""
+
+from __future__ import annotations
+
+import io
+import struct
+
+import numpy as np
+
+from repro.configs.paper_store import PAPER_STORE
+from repro.core import DeltaTensorStore
+from repro.core.encodings.base import SparseCOO
+from repro.data.synthetic import uber_like
+
+from .common import fresh_store, row, timed
+
+FORMATS = ("coo", "csr", "csf", "bsgs")
+
+
+def _pt_blob(t: SparseCOO) -> bytes:
+    """torch .pt analog: header + raw int64 indices + values."""
+    buf = io.BytesIO()
+    header = struct.pack("<4sIIQ", b"PTAN", t.ndim, t.values.dtype.itemsize,
+                         t.nnz)
+    buf.write(header)
+    buf.write(np.asarray(t.shape, np.int64).tobytes())
+    buf.write(t.indices.astype(np.int64).tobytes())
+    buf.write(t.values.tobytes())
+    return buf.getvalue()
+
+
+def _pt_parse(raw: bytes, dtype) -> SparseCOO:
+    magic, ndim, isz, nnz = struct.unpack_from("<4sIIQ", raw, 0)
+    off = struct.calcsize("<4sIIQ")
+    shape = tuple(np.frombuffer(raw, np.int64, ndim, off))
+    off += 8 * ndim
+    idx = np.frombuffer(raw, np.int64, nnz * ndim, off).reshape(nnz, ndim)
+    off += 8 * nnz * ndim
+    vals = np.frombuffer(raw, dtype, nnz, off)
+    return SparseCOO(idx.copy(), vals.copy(), shape)
+
+
+def run(shape=None, repeats=None):
+    cfgs = PAPER_STORE["sparse"]
+    t = uber_like(shape or cfgs["bench_shape"], cfgs["nnz_ratio"])
+    d0 = t.shape[0]
+    sl = (d0 // 2, d0 // 2 + 1)   # X[i] slice, paper's Fig. 16 read
+    repeats = repeats or PAPER_STORE["repeats"]
+    lines = []
+
+    # --- PT baseline ----------------------------------------------------------
+    obj, lm = fresh_store()
+    w = timed(lm, lambda: obj.put("pt/x.pt", _pt_blob(t)), repeats)
+    size_pt = obj.head("pt/x.pt")
+    r = timed(lm, lambda: _pt_parse(obj.get("pt/x.pt"), t.values.dtype).to_dense(),
+              repeats)
+
+    def pt_slice():
+        full = _pt_parse(obj.get("pt/x.pt"), t.values.dtype)
+        full.slice(tuple([sl] + [(0, s) for s in t.shape[1:]])).to_dense()
+
+    s = timed(lm, pt_slice, repeats)
+    lines.append(row("sparse_pt_write", w.total_s * 1e6, f"size_bytes={size_pt}"))
+    lines.append(row("sparse_pt_read_tensor", r.total_s * 1e6, ""))
+    lines.append(row("sparse_pt_read_slice", s.total_s * 1e6,
+                     f"bytes_moved={s.bytes_moved}"))
+
+    results = {"pt": (size_pt, w, r, s)}
+
+    # --- proposed formats --------------------------------------------------
+    for layout in FORMATS:
+        obj, lm = fresh_store()
+        store = DeltaTensorStore(obj, "tensors")
+        kw = {}
+        if layout == "bsgs":
+            kw["block_shape"] = cfgs["bsgs_block"]
+        if layout == "csr":
+            kw["split"] = cfgs["csr_split"]
+        w = timed(lm, lambda: store.put(t, layout=layout, tensor_id="x",
+                                        overwrite=True, **kw), repeats)
+        size = store.tensor_bytes("x")
+        r = timed(lm, lambda: store.get("x"), repeats)
+        s = timed(lm, lambda: store.get_slice("x", [sl]), repeats)
+        results[layout] = (size, w, r, s)
+        cr = size / size_pt
+        lines.append(row(f"sparse_{layout}_write", w.total_s * 1e6,
+                         f"size_bytes={size};Cr_vs_pt={cr:.4f}"))
+        lines.append(row(f"sparse_{layout}_read_tensor", r.total_s * 1e6,
+                         f"io_s={r.io_s:.3f}"))
+        lines.append(row(f"sparse_{layout}_read_slice", s.total_s * 1e6,
+                         f"bytes_moved={s.bytes_moved}"))
+
+    # --- paper-claim summary ---------------------------------------------------
+    best_cr = min(FORMATS, key=lambda f: results[f][0])
+    best_w = min(FORMATS, key=lambda f: results[f][1].total_s)
+    best_r = min(FORMATS, key=lambda f: results[f][2].total_s)
+    best_s = min(FORMATS, key=lambda f: results[f][3].total_s)
+    lines.append(row(
+        "sparse_summary", 0.0,
+        f"best_Cr={best_cr}({results[best_cr][0]/size_pt:.4f}) "
+        f"[paper: bsgs 0.0483]; fastest_write={best_w} [paper: csf]; "
+        f"fastest_read={best_r} [paper: bsgs]; fastest_slice={best_s} "
+        f"[paper: bsgs]"))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

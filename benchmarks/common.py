@@ -1,0 +1,48 @@
+"""Shared benchmark machinery: paper-style metrics over the modeled
+object store (1 Gbps + 10 ms RTT, the paper's testbed network), with
+modeled I/O time and real encode/decode CPU time reported separately and
+summed — reproducing Eqs. (7)-(10)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+from repro.configs.paper_store import PAPER_STORE
+from repro.lake import InMemoryObjectStore, LatencyModel
+
+
+@dataclass
+class OpCost:
+    cpu_s: float
+    io_s: float
+    bytes_moved: int
+
+    @property
+    def total_s(self) -> float:
+        return self.cpu_s + self.io_s
+
+
+def fresh_store():
+    lm = LatencyModel(rtt_s=PAPER_STORE["object_store"]["rtt_s"],
+                      bandwidth_bps=PAPER_STORE["object_store"]["bandwidth_bps"],
+                      virtual_clock=True)
+    return InMemoryObjectStore(latency=lm), lm
+
+
+def timed(lm: LatencyModel, fn: Callable, repeats: int = 1) -> OpCost:
+    best = None
+    for _ in range(repeats):
+        lm.reset()
+        t0 = time.perf_counter()
+        fn()
+        cpu = time.perf_counter() - t0
+        cost = OpCost(cpu_s=cpu, io_s=lm.elapsed_s, bytes_moved=lm.bytes_moved)
+        if best is None or cost.total_s < best.total_s:
+            best = cost
+    return best
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,136 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) from dry-run
+artifacts (experiments/dryrun/*.json).
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. The corrected (loop-aware) per-device HLO costs give:
+
+  compute term    = flops / peak_flops
+  memory term     = hbm_bytes / hbm_bw
+  collective term = collective_bytes / link_bw
+
+The bound step time is max(terms) (perfect-overlap assumption — XLA's
+latency-hiding scheduler overlaps collectives with compute); the roofline
+fraction = compute_term / bound, i.e. the share of the step the MXUs can be
+busy. MODEL_FLOPS/HLO_FLOPs (analytic 6·N·D or 2·N·D vs compiled, per
+device) catches remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh: str = "single", tag: str = "") -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def terms(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rec.get("status") != "ok" or "corrected" not in rec:
+        return None
+    n_dev = rec["n_devices"]
+    c = rec["corrected"]
+    compute_s = c["flops"] / PEAK_FLOPS
+    memory_s = c["bytes"] / HBM_BW
+    coll_s = sum(c["coll_bytes"].values()) / LINK_BW
+    bound = max(compute_s, memory_s, coll_s, 1e-12)
+    dominant = ("compute" if bound == compute_s else
+                "memory" if bound == memory_s else "collective")
+    model_flops_dev = (rec["analytic"]["model_flops"] +
+                       rec["analytic"]["attn_flops"]) / n_dev
+    ratio = model_flops_dev / max(c["flops"], 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "bound_s": bound, "dominant": dominant,
+        "fraction": compute_s / bound,
+        "model_hlo_ratio": ratio,
+        "hbm_per_dev_gb": (rec["memory"].get("temp_size_in_bytes") or 0) / 1e9,
+        "note": rec.get("note", ""),
+        "tag": rec.get("tag", ""),
+    }
+
+
+FIX_HINTS = {
+    "compute": "already MXU-bound: raise MODEL/HLO ratio (less remat) or "
+               "overlap the residual comm",
+    "memory": "cut HBM traffic: looser remat policy (save dots), bf16 "
+              "optimizer moments, fuse gather/scatter paths, donate caches",
+    "collective": "cut wire bytes: reshard (2D sharding), reduce-scatter "
+                  "instead of all-reduce, compress cross-pod gradients "
+                  "(BSGS top-k), overlap via latency-hiding scheduler",
+}
+
+
+def table(mesh: str = "single", tag: str = "") -> List[Dict[str, Any]]:
+    out = []
+    for rec in load(mesh, tag):
+        t = terms(rec)
+        if t:
+            out.append(t)
+        elif rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "dominant": "skipped",
+                        "note": rec.get("reason", "")})
+    return out
+
+
+def markdown(rows: List[Dict[str, Any]]) -> str:
+    lines = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+             "dominant | roofline frac | MODEL/HLO |",
+             "|---|---|---|---|---|---|---|---|"]
+    for t in rows:
+        if t["dominant"] == "skipped":
+            lines.append(f"| {t['arch']} | {t['shape']} | — | — | — | "
+                         f"skip: {t['note'][:60]} | — | — |")
+            continue
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']*1e3:.2f} | "
+            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+            f"{t['dominant']} | {t['fraction']:.2%} | "
+            f"{t['model_hlo_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> List[str]:
+    rows = table("single")
+    ok = [t for t in rows if t["dominant"] != "skipped"]
+    lines = []
+    for t in ok:
+        lines.append(
+            f"roofline_{t['arch']}_{t['shape']},{t['bound_s']*1e6:.1f},"
+            f"dominant={t['dominant']};fraction={t['fraction']:.3f};"
+            f"model_hlo_ratio={t['model_hlo_ratio']:.2f}")
+    if ok:
+        worst = min(ok, key=lambda t: t["fraction"])
+        coll = max(ok, key=lambda t: t["collective_s"] / t["bound_s"])
+        lines.append(
+            f"roofline_summary,0.0,cells={len(ok)};"
+            f"worst_fraction={worst['arch']}×{worst['shape']}"
+            f"({worst['fraction']:.2%});most_collective_bound="
+            f"{coll['arch']}×{coll['shape']}")
+    return lines
+
+
+if __name__ == "__main__":
+    rows = table("single")
+    print(markdown(rows))
+    ok = [t for t in rows if t["dominant"] != "skipped"]
+    for kind in ("compute", "memory", "collective"):
+        n = sum(1 for t in ok if t["dominant"] == kind)
+        print(f"# dominant={kind}: {n} cells — fix: {FIX_HINTS[kind]}")

@@ -1,0 +1,26 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  Fig. 12  -> bench_dense_ftsf      (dense: binary vs FTSF)
+  Fig. 13-16 -> bench_sparse_formats (sparse: COO/CSR/CSF/BSGS vs PT)
+  Eq. 8 hot loops -> bench_kernels
+  DESIGN §2 wire compression -> bench_grad_compress
+  §Roofline -> roofline (from dry-run artifacts, if present)
+"""
+
+
+def main() -> None:
+    from . import (bench_dense_ftsf, bench_grad_compress, bench_kernels,
+                   bench_sparse_formats, roofline)
+    print("name,us_per_call,derived")
+    for mod in (bench_dense_ftsf, bench_sparse_formats, bench_kernels,
+                bench_grad_compress, roofline):
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception as e:  # keep the harness running end to end
+            print(f"{mod.__name__}_ERROR,0.0,{type(e).__name__}: {e}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,63 @@
+"""Cross-pod gradient compression demo — the paper's BSGS on the wire.
+
+    PYTHONPATH=src python examples/grad_compression.py --steps 40
+
+Two simulated pods train in data parallel; each step exchanges only the
+top-k energy blocks of the gradients (+ error feedback). The demo compares
+loss curves and wire bytes against dense synchronization.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_arch
+from repro.train import optimizer as opt, trainer
+
+
+def run(compressed: bool, steps: int, ratio: float):
+    cfg = get_arch("granite-3-8b").reduced()
+    ocfg = opt.OptConfig(lr=5e-3, warmup_steps=5, total_steps=steps)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+    labels = jnp.concatenate([tokens[:, 1:], -jnp.ones((4, 1), jnp.int32)], 1)
+    batch = {"tokens": tokens.reshape(2, 2, 32),
+             "labels": labels.reshape(2, 2, 32)}
+
+    if compressed:
+        state = trainer.init_compressed_state(cfg, jax.random.key(0), n_pods=2)
+        step = jax.jit(trainer.make_compressed_train_step(cfg, ocfg, ratio=ratio))
+    else:
+        state = trainer.init_compressed_state(cfg, jax.random.key(0), n_pods=2)
+        step = jax.jit(trainer.make_compressed_train_step(cfg, ocfg, ratio=1.0))
+
+    losses, wire = [], 1.0
+    for _ in range(steps):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        wire = float(m["wire_ratio"])
+    return losses, wire
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--ratio", type=float, default=0.25)
+    args = ap.parse_args()
+
+    dense_losses, dense_wire = run(False, args.steps, 1.0)
+    comp_losses, comp_wire = run(True, args.steps, args.ratio)
+    print(f"{'step':>5} {'dense':>8} {'compressed':>11}")
+    for i in range(0, args.steps, max(args.steps // 10, 1)):
+        print(f"{i:>5} {dense_losses[i]:>8.3f} {comp_losses[i]:>11.3f}")
+    print(f"\nfinal: dense {dense_losses[-1]:.3f} (wire ratio {dense_wire:.2f}) "
+          f"vs compressed {comp_losses[-1]:.3f} (wire ratio {comp_wire:.3f})")
+    print(f"cross-pod traffic cut to {comp_wire:.1%} with final-loss delta "
+          f"{comp_losses[-1]-dense_losses[-1]:+.4f} (error feedback re-injects "
+          f"dropped blocks; see tests/test_train_e2e.py for the lockstep check)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Delta Tensor (Bao et al., CS.DC 2024) as a multi-pod JAX/TPU framework.
+
+The paper's five tensor-storage formats (FTSF, COO, CSR/CSC, CSF, BSGS)
+implemented over a mini Delta Lake (`repro.lake`, `repro.core`) and
+integrated into a distributed training/serving stack: FTSF data pipelines,
+incremental delta-lake checkpointing with elastic restore, and BSGS
+block-top-k gradient compression on the cross-pod link. See DESIGN.md and
+EXPERIMENTS.md.
+"""

@@ -1,0 +1,322 @@
+"""Loop-aware cost analysis over optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — a
+``lax.scan`` over 40 layers contributes its body a single time, so FLOPs /
+bytes / collective bytes are undercounted by the trip count. This module
+re-derives the three roofline inputs by walking the HLO call graph:
+
+* per-op FLOPs: dot ops from operand shapes (resolved through a name→type
+  map, since optimized HLO prints operands untyped) + dimension numbers:
+  2 · prod(out_dims) · prod(lhs_contracting_dims);
+* per-op HBM bytes: operands + result of top-level (post-fusion) ops —
+  XLA's own memory model; fusion-internal ops contribute FLOPs only;
+* collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute);
+* ``while`` ops multiply body+condition costs by the trip count parsed
+  from the condition computation's comparison constant.
+
+Costs are for the SPMD per-device program — exactly what the per-chip
+roofline terms need.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# out_type matched lazily: tuple types embed /*index=N*/ comments; the
+# first ` opcode(` token after `=` is the real opcode (types never contain
+# parentheses except the outer tuple wrapper).
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+"
+                    r"([\w\-]+)\((.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]))")
+_ARGNAME_RE = re.compile(r"%([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:to_apply|calls|branch_computations)="
+                       r"[{]?%?([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose "traffic" is bookkeeping, not HBM bytes
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "after-all", "iota", "partition-id", "replica-id", "domain",
+             "opt-barrier"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        for d in dims.split(","):
+            if d:
+                elems *= int(d)
+        total += elems * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0, with_bytes: bool = True) -> None:
+        self.flops += other.flops * mult
+        if with_bytes:
+            self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+@dataclass
+class _Op:
+    name: str
+    out_type: str
+    opcode: str
+    rest: str
+    is_root: bool = False
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+
+
+def _split_args_attrs(rest: str):
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+class HloProgram:
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, _Computation] = {}
+        self.types: Dict[str, str] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[_Computation] = None
+        for line in hlo.splitlines():
+            if not line.strip():
+                continue
+            if not line.startswith(" "):
+                m = _HEADER_RE.match(line)
+                if m:
+                    cur = _Computation(m.group(1))
+                    self.comps[cur.name] = cur
+                    if line.startswith("ENTRY"):
+                        self.entry = cur.name
+                    for pm in _PARAM_RE.finditer(m.group(2)):
+                        self.types[pm.group(1)] = pm.group(2)
+                continue
+            m = _OP_RE.match(line)
+            if m and cur is not None:
+                op = _Op(m.group(1), m.group(2), m.group(3), m.group(4),
+                         is_root=line.lstrip().startswith("ROOT"))
+                cur.ops.append(op)
+                self.types[op.name] = op.out_type
+
+    # -- per-op costs ---------------------------------------------------------
+
+    def _dot_flops(self, op: _Op) -> float:
+        args, attrs = _split_args_attrs(op.rest)
+        names = _ARGNAME_RE.findall(args)
+        if not names:
+            return 0.0
+        lhs_type = self.types.get(names[0], "")
+        ms = _SHAPE_RE.search(lhs_type)
+        if not ms:
+            return 0.0
+        lhs_dims = [int(d) for d in ms.group(2).split(",") if d]
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+        contract = 1
+        if mc:
+            for idx in (int(i) for i in mc.group(1).split(",") if i):
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+        out = 1
+        mo = _SHAPE_RE.search(op.out_type)
+        if mo:
+            for d in mo.group(2).split(","):
+                if d:
+                    out *= int(d)
+        return 2.0 * out * contract
+
+    def _trip_count(self, comp: _Computation) -> float:
+        best = 1.0
+        for op in comp.ops:
+            if op.opcode == "constant":
+                m = re.match(r"(\d+)\)", op.rest)
+                if m:
+                    best = max(best, float(m.group(1)))
+        return best
+
+    @staticmethod
+    def _known_trip_count(rest: str) -> float:
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+        return float(m.group(1)) if m else 0.0
+
+    # slicing ops read only their output's worth of the operand — charging
+    # the full operand would bill a 40-layer stacked param once per scan
+    # iteration (the dominant overcount XLA's utilization model also fixes)
+    _SLICING = {"dynamic-slice", "slice", "gather"}
+
+    def _param_index(self, comp: _Computation) -> Dict[str, int]:
+        out = {}
+        for op in comp.ops:
+            if op.opcode == "parameter":
+                m = re.match(r"(\d+)\)", op.rest)
+                if m:
+                    out[op.name] = int(m.group(1))
+        return out
+
+    def _fusion_operand_util(self, callee: _Computation) -> Dict[int, float]:
+        """Per-parameter bytes actually read inside a fusion: if a param is
+        consumed only through slicing ops (or as the in-place target of a
+        dynamic-update-slice), charge the touched bytes, not the buffer."""
+        pidx = self._param_index(callee)
+        util: Dict[int, float] = {}
+        consumed_fully = set()
+        for op in callee.ops:
+            args, _ = _split_args_attrs(op.rest)
+            names = _ARGNAME_RE.findall(args)
+            nameset = set(names)
+            for pname, idx in pidx.items():
+                if pname not in nameset:
+                    continue
+                if op.opcode in self._SLICING:
+                    util[idx] = util.get(idx, 0.0) + _shape_bytes(op.out_type)
+                elif (op.opcode == "dynamic-update-slice"
+                      and names and names[0] == pname):
+                    # in-place accumulator target: charge the update only
+                    upd = self.types.get(names[1], "") if len(names) > 1 else ""
+                    util[idx] = util.get(idx, 0.0) + _shape_bytes(upd)
+                elif op.opcode not in _FREE_OPS and op.opcode != "bitcast":
+                    consumed_fully.add(idx)
+        for idx in consumed_fully:
+            util.pop(idx, None)
+        return util
+
+    def _fusion_output_bytes(self, callee: _Computation, out_b: float) -> float:
+        """A fusion rooted in dynamic-update-slice writes only the update
+        (XLA aliases the buffer); charge the touched bytes."""
+        roots = [op for op in callee.ops if op.is_root]
+        if not roots:
+            return out_b
+        root = roots[-1]
+        def dus_bytes(op):
+            args, _ = _split_args_attrs(op.rest)
+            names = _ARGNAME_RE.findall(args)
+            return (_shape_bytes(self.types.get(names[1], ""))
+                    if len(names) > 1 else 0.0)
+        if root.opcode == "dynamic-update-slice":
+            return dus_bytes(root)
+        if root.opcode == "tuple":
+            args, _ = _split_args_attrs(root.rest)
+            total, hit = 0.0, False
+            for n in _ARGNAME_RE.findall(args):
+                inner = next((o for o in callee.ops if o.name == n), None)
+                if inner is not None and inner.opcode == "dynamic-update-slice":
+                    total += dus_bytes(inner)
+                    hit = True
+                else:
+                    total += _shape_bytes(self.types.get(n, ""))
+            return total if hit else out_b
+        return out_b
+
+    def _op_bytes(self, op: _Op) -> float:
+        if op.opcode in _FREE_OPS:
+            return 0.0
+        args, _ = _split_args_attrs(op.rest)
+        names = _ARGNAME_RE.findall(args)
+        out_b = float(_shape_bytes(op.out_type))
+        if op.opcode in self._SLICING:
+            return 2.0 * out_b
+        if op.opcode in ("dynamic-update-slice", "scatter"):
+            upd = _shape_bytes(self.types.get(names[1], "")) if len(names) > 1 else 0
+            return out_b * 0.0 + 2.0 * upd + 64.0  # in-place: read+write update
+        if op.opcode == "fusion":
+            callees = _CALLS_RE.findall(op.rest)
+            callee = (self.comps[callees[0]]
+                      if callees and callees[0] in self.comps else None)
+            util = self._fusion_operand_util(callee) if callee else {}
+            total = (self._fusion_output_bytes(callee, out_b)
+                     if callee else out_b)
+            for i, name in enumerate(names):
+                full = _shape_bytes(self.types.get(name, ""))
+                total += min(full, util.get(i, full))
+            return total
+        total = out_b
+        for name in names:
+            total += _shape_bytes(self.types.get(name, ""))
+        return total
+
+    def _op_cost(self, op: _Op, memo) -> Cost:
+        c = Cost()
+        if op.opcode == "while":
+            trip = self._known_trip_count(op.rest)  # XLA's own annotation
+            if trip == 0.0:
+                mc = _WHILE_COND_RE.search(op.rest)
+                trip = (self._trip_count(self.comps[mc.group(1)])
+                        if mc and mc.group(1) in self.comps else 1.0)
+            mb = _WHILE_BODY_RE.search(op.rest)
+            if mb and mb.group(1) in self.comps:
+                c.add(self._comp_cost(self.comps[mb.group(1)], memo), mult=trip)
+            return c
+        for callee in _CALLS_RE.findall(op.rest):
+            if callee in self.comps:
+                # fusion-internal bytes are VMEM-local: flops/collectives only
+                c.add(self._comp_cost(self.comps[callee], memo),
+                      with_bytes=False)
+        if op.opcode == "dot":
+            c.flops += self._dot_flops(op)
+        base = op.opcode.replace("-start", "")
+        if base in COLLECTIVES and not op.opcode.endswith("-done"):
+            nbytes = float(_shape_bytes(op.out_type))
+            c.coll_bytes[base] = c.coll_bytes.get(base, 0.0) + nbytes
+            c.coll_count[base] = c.coll_count.get(base, 0.0) + 1
+        c.bytes += self._op_bytes(op)
+        return c
+
+    def _comp_cost(self, comp: _Computation, memo) -> Cost:
+        if comp.name in memo:
+            return memo[comp.name]
+        memo[comp.name] = Cost()
+        total = Cost()
+        for op in comp.ops:
+            total.add(self._op_cost(op, memo))
+        memo[comp.name] = total
+        return total
+
+    def cost(self) -> Cost:
+        if self.entry is None or self.entry not in self.comps:
+            return Cost()
+        return self._comp_cost(self.comps[self.entry], {})
+
+
+def analyze(hlo: str) -> Cost:
+    return HloProgram(hlo).cost()

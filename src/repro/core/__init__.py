@@ -1,0 +1,12 @@
+"""The paper's primary contribution: tensor storage in a delta table.
+
+Five codecs (FTSF, COO, CSR/CSC, CSF, BSGS), the 10% sparsity policy, the
+DeltaTensorStore facade, and device-side (jit) encodings for in-training use.
+"""
+from .encodings.base import SparseCOO, get_codec, normalize_slices
+from .encodings import ftsf, coo, csr, csf, bsgs  # noqa: F401 (register codecs)
+from .sparsity import SPARSE_THRESHOLD, choose_layout, density
+from .store import DeltaTensorStore
+
+__all__ = ["SparseCOO", "get_codec", "normalize_slices", "SPARSE_THRESHOLD",
+           "choose_layout", "density", "DeltaTensorStore"]

@@ -1,0 +1,142 @@
+"""Device-side (jit-compatible) tensor encodings.
+
+JAX programs need static shapes, so the device variants of the paper's
+codecs carry a fixed ``capacity`` plus a live count — the standard TPU
+treatment of dynamic sparsity. These are the pure-jnp reference paths; the
+Pallas kernels in ``repro.kernels`` implement the same contracts with
+explicit VMEM tiling and are validated against these functions.
+
+Used in-training by:
+* gradient compression (``bsgs_topk`` + ``bsgs_decode``) before the
+  cross-pod all-reduce;
+* on-device materialization of sparse batches read from the store.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DeviceCOO(NamedTuple):
+    flat_indices: jax.Array  # (capacity,) int32/int64; == size => padding
+    values: jax.Array        # (capacity,)
+    nnz: jax.Array           # () int32, clamped to capacity
+
+
+class DeviceBlocks(NamedTuple):
+    block_ids: jax.Array     # (capacity,) flattened block-grid ids; == n_blocks => pad
+    blocks: jax.Array        # (capacity, block_elems)
+    count: jax.Array         # () int32
+
+
+# ---------------------------------------------------------------------------
+# COO
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def coo_encode(x: jax.Array, capacity: int) -> DeviceCOO:
+    flat = x.reshape(-1)
+    size = flat.shape[0]
+    idx = jnp.flatnonzero(flat != 0, size=capacity, fill_value=size)
+    vals = jnp.where(idx < size, flat[jnp.clip(idx, 0, size - 1)], 0)
+    nnz = jnp.minimum(jnp.sum(flat != 0), capacity).astype(jnp.int32)
+    return DeviceCOO(idx.astype(jnp.int32) if size < 2**31 else idx, vals, nnz)
+
+
+@partial(jax.jit, static_argnames=("shape",))
+def coo_decode(coo: DeviceCOO, shape: Tuple[int, ...]) -> jax.Array:
+    size = math.prod(shape)
+    flat = jnp.zeros((size,), dtype=coo.values.dtype)
+    # mode="drop" discards the out-of-range padding entries
+    flat = flat.at[coo.flat_indices].set(coo.values, mode="drop")
+    return flat.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# blocks: shared reshape helpers
+# ---------------------------------------------------------------------------
+
+
+def _block_view_shape(shape: Sequence[int], bs: Sequence[int]):
+    """Interleaved (g0,b0,g1,b1,...) shape + permutation to (g..., b...)."""
+    nd = len(shape)
+    grid = tuple(-(-s // b) for s, b in zip(shape, bs))
+    inter = tuple(v for d in range(nd) for v in (grid[d], bs[d]))
+    perm = tuple(2 * d for d in range(nd)) + tuple(2 * d + 1 for d in range(nd))
+    return grid, inter, perm
+
+
+def blockify(x: jax.Array, block_shape: Sequence[int]) -> jax.Array:
+    """(… dense …) -> (n_blocks, block_elems), zero-padding ragged edges."""
+    bs = tuple(block_shape)
+    shape = x.shape
+    grid, inter, perm = _block_view_shape(shape, bs)
+    pads = [(0, g * b - s) for g, b, s in zip(grid, bs, shape)]
+    xp = jnp.pad(x, pads)
+    xv = xp.reshape(inter).transpose(perm)
+    return xv.reshape(math.prod(grid), math.prod(bs))
+
+
+def unblockify(blocks: jax.Array, shape: Sequence[int],
+               block_shape: Sequence[int]) -> jax.Array:
+    bs = tuple(block_shape)
+    grid, inter, perm = _block_view_shape(shape, bs)
+    inv = np.argsort(perm)
+    xv = blocks.reshape(grid + bs).transpose(tuple(inv))
+    xp = xv.reshape(tuple(g * b for g, b in zip(grid, bs)))
+    return xp[tuple(slice(0, s) for s in shape)]
+
+
+# ---------------------------------------------------------------------------
+# BSGS: exact non-zero-block encoding
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("block_shape", "capacity"))
+def bsgs_encode(x: jax.Array, block_shape: Tuple[int, ...], capacity: int) -> DeviceBlocks:
+    bv = blockify(x, block_shape)
+    n_blocks = bv.shape[0]
+    nonzero = jnp.any(bv != 0, axis=1)
+    ids = jnp.flatnonzero(nonzero, size=capacity, fill_value=n_blocks)
+    gathered = bv[jnp.clip(ids, 0, n_blocks - 1)]
+    gathered = jnp.where((ids < n_blocks)[:, None], gathered, 0)
+    count = jnp.minimum(jnp.sum(nonzero), capacity).astype(jnp.int32)
+    return DeviceBlocks(ids.astype(jnp.int32), gathered, count)
+
+
+@partial(jax.jit, static_argnames=("shape", "block_shape"))
+def bsgs_decode(db: DeviceBlocks, shape: Tuple[int, ...],
+                block_shape: Tuple[int, ...]) -> jax.Array:
+    grid, _, _ = _block_view_shape(shape, block_shape)
+    n_blocks = math.prod(grid)
+    bv = jnp.zeros((n_blocks, db.blocks.shape[1]), dtype=db.blocks.dtype)
+    bv = bv.at[db.block_ids].set(db.blocks, mode="drop")
+    return unblockify(bv, shape, block_shape)
+
+
+# ---------------------------------------------------------------------------
+# block top-k (gradient compression): keep the k highest-energy blocks
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("block_shape", "k"))
+def bsgs_topk(x: jax.Array, block_shape: Tuple[int, ...], k: int) -> DeviceBlocks:
+    bv = blockify(x, block_shape)
+    norms = jnp.sum(jnp.square(bv.astype(jnp.float32)), axis=1)
+    _, ids = jax.lax.top_k(norms, k)
+    ids = ids.astype(jnp.int32)
+    return DeviceBlocks(ids, bv[ids], jnp.asarray(k, jnp.int32))
+
+
+def compression_ratio(db: DeviceBlocks, shape: Sequence[int]) -> float:
+    """Bytes kept / dense bytes — the paper's Cr, device-side."""
+    kept = db.blocks.size * db.blocks.dtype.itemsize + db.block_ids.size * 4
+    dense = math.prod(shape) * db.blocks.dtype.itemsize
+    return kept / dense

@@ -1,0 +1,184 @@
+"""DeltaTensorStore — the paper's system: tensors in a delta table.
+
+``put`` encodes a tensor with one of the five codecs and lands the row
+groups as parq-lite files in a single atomic commit, partitioned by
+``(tensor, kind)``. ``get``/``get_slice`` are the paper's read-tensor /
+read-slice operations: slice reads fetch the 1-row header, derive pushdown
+filters from the codec, and touch only the chunk files whose min/max stats
+overlap the slice. ``version=`` arguments give Delta time travel.
+"""
+
+from __future__ import annotations
+
+import uuid
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..lake import DeltaTable, ObjectStore
+from .encodings import base as enc_base
+from .encodings.base import (RowGroup, SparseCOO, get_codec, header_shape,
+                             is_header, normalize_slices)
+from .sparsity import choose_layout
+
+TARGET_FILE_BYTES = 4 << 20
+
+
+def _approx_row_bytes(columns: Dict[str, Any], rows: int) -> float:
+    total = 0
+    for v in columns.values():
+        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
+            total += v.nbytes
+        else:
+            for item in v:
+                if isinstance(item, (bytes, bytearray)):
+                    total += len(item)
+                elif isinstance(item, np.ndarray):
+                    total += item.nbytes
+                else:
+                    total += 8
+    return total / max(rows, 1)
+
+
+def _slice_columns(columns: Dict[str, Any], lo: int, hi: int) -> Dict[str, Any]:
+    out = {}
+    for k, v in columns.items():
+        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
+            out[k] = v[lo:hi]
+        else:
+            out[k] = list(v[lo:hi])
+    return out
+
+
+class DeltaTensorStore:
+    def __init__(self, object_store: ObjectStore, root: str = "tensor_store"):
+        self.table = DeltaTable.create(object_store, root)
+        self._header_cache: Dict[str, Dict[str, Any]] = {}
+
+    # -- write -------------------------------------------------------------
+
+    def put_deferred(self, tensor: Any, *, layout: str = "auto",
+                     tensor_id: Optional[str] = None,
+                     target_file_bytes: int = TARGET_FILE_BYTES,
+                     **codec_params) -> List[Dict[str, Any]]:
+        """Upload part files WITHOUT committing; returns add-actions.
+
+        Callers batch many tensors into one atomic ``table.commit_adds``
+        (the distributed-checkpoint two-phase commit).
+        """
+        if layout == "auto":
+            layout = choose_layout(tensor)
+        codec = get_codec(layout)
+        tid = tensor_id or f"{layout}-{uuid.uuid4().hex[:12]}"
+        groups = codec.encode(tensor, **{k: v for k, v in codec_params.items()
+                                         if v is not None})
+        adds = []
+        for grp in groups:
+            rows = len(next(iter(grp.columns.values())))
+            per_file = max(1, int(target_file_bytes //
+                                  max(_approx_row_bytes(grp.columns, rows), 1)))
+            for lo in range(0, rows, per_file):
+                cols = _slice_columns(grp.columns, lo, min(rows, lo + per_file))
+                adds.append(self.table.append(
+                    cols, commit=False,
+                    partition_values={"tensor": tid, "kind": grp.kind,
+                                      "layout": layout}))
+            if grp.kind == "header":
+                self._header_cache[tid] = grp.columns
+        return adds
+
+    def put(self, tensor: Any, *, layout: str = "auto", tensor_id: Optional[str] = None,
+            overwrite: bool = False, target_file_bytes: int = TARGET_FILE_BYTES,
+            **codec_params) -> str:
+        if layout == "auto":
+            layout = choose_layout(tensor)
+        tid = tensor_id or f"{layout}-{uuid.uuid4().hex[:12]}"
+
+        existing = [a["path"] for a in self.table.files()
+                    if a.get("partitionValues", {}).get("tensor") == tid]
+        if existing and not overwrite:
+            raise ValueError(f"tensor {tid!r} already exists (use overwrite=True)")
+
+        adds = self.put_deferred(tensor, layout=layout, tensor_id=tid,
+                                 target_file_bytes=target_file_bytes,
+                                 **codec_params)
+        self.table.commit_adds(adds, removes=existing, op="PUT TENSOR")
+        return tid
+
+    # -- read --------------------------------------------------------------
+
+    def _layout_of(self, tid: str, version: Optional[int]) -> str:
+        for a in self.table.files(version):
+            pv = a.get("partitionValues", {})
+            if pv.get("tensor") == tid:
+                return pv["layout"]
+        raise KeyError(f"tensor {tid!r} not found")
+
+    def _header(self, tid: str, version: Optional[int]) -> Dict[str, Any]:
+        if version is None and tid in self._header_cache:
+            return self._header_cache[tid]
+        batches = list(self.table.scan(
+            partition_filters={"tensor": tid, "kind": "header"}, version=version))
+        if not batches:
+            raise KeyError(f"tensor {tid!r}: no header")
+        if version is None:
+            self._header_cache[tid] = batches[0]
+        return batches[0]
+
+    def get(self, tid: str, *, version: Optional[int] = None) -> np.ndarray:
+        layout = self._layout_of(tid, version)
+        codec = get_codec(layout)
+        groups = [self._header(tid, version)]
+        groups += list(self.table.scan(
+            partition_filters={"tensor": tid, "kind": "chunk"}, version=version))
+        return codec.decode(groups)
+
+    def get_coo(self, tid: str, *, version: Optional[int] = None) -> SparseCOO:
+        layout = self._layout_of(tid, version)
+        codec = get_codec(layout)
+        groups = [self._header(tid, version)]
+        groups += list(self.table.scan(
+            partition_filters={"tensor": tid, "kind": "chunk"}, version=version))
+        if hasattr(codec, "decode_coo"):
+            return codec.decode_coo(groups)
+        return SparseCOO.from_dense(codec.decode(groups))
+
+    def get_slice(self, tid: str, slices: Sequence[Optional[Tuple[int, int]]], *,
+                  version: Optional[int] = None) -> np.ndarray:
+        layout = self._layout_of(tid, version)
+        codec = get_codec(layout)
+        header = self._header(tid, version)
+        spec = normalize_slices(header_shape(header), slices)
+        filters = codec.slice_filters(header, spec)
+        groups: List[Dict[str, Any]] = [header]
+        groups += list(self.table.scan(
+            filters=filters or None,
+            partition_filters={"tensor": tid, "kind": "chunk"}, version=version))
+        return codec.decode_slice(groups, spec)
+
+    # -- catalog -------------------------------------------------------------
+
+    def list_tensors(self, version: Optional[int] = None) -> List[Tuple[str, str]]:
+        seen = {}
+        for a in self.table.files(version):
+            pv = a.get("partitionValues", {})
+            if "tensor" in pv:
+                seen[pv["tensor"]] = pv["layout"]
+        return sorted(seen.items())
+
+    def shape_of(self, tid: str, *, version: Optional[int] = None) -> Tuple[int, ...]:
+        return header_shape(self._header(tid, version))
+
+    def tensor_bytes(self, tid: str, *, version: Optional[int] = None) -> int:
+        return sum(a["size"] for a in self.table.files(version)
+                   if a.get("partitionValues", {}).get("tensor") == tid)
+
+    def delete(self, tid: str) -> None:
+        removes = [a["path"] for a in self.table.files()
+                   if a.get("partitionValues", {}).get("tensor") == tid]
+        if removes:
+            self.table.commit_adds([], removes=removes, op="DELETE TENSOR")
+        self._header_cache.pop(tid, None)
+
+    def version(self) -> int:
+        return self.table.version()

@@ -1,0 +1,134 @@
+"""FTSF-backed training-data pipeline.
+
+This is the paper's headline use case (its §V.A discussion): datasets live
+as FTSF chunk rows in a delta table; an SGD batch fetch is a slice read
+that touches only the covering chunk files. The loader adds the
+scale-out machinery:
+
+* **per-host sharding**: host *h* of *H* owns sample rows ``h::H`` — each
+  host's reads prune to its own files (no shared-prefix hot-spotting);
+* **prefetch**: a background thread keeps ``depth`` batches decoded ahead;
+* **hedged reads** (straggler mitigation): an optional second attempt for
+  a slow chunk fetch, racing the original (object-store tail latencies);
+* **determinism**: batch order is a pure function of (seed, step), so an
+  elastic restart at step *s* replays exactly the remaining stream.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from ..core.store import DeltaTensorStore
+
+
+def write_token_dataset(store: DeltaTensorStore, tokens: np.ndarray, *,
+                        tensor_id: str = "train_tokens",
+                        target_file_bytes: int = 1 << 20) -> str:
+    """tokens: (n_samples, seq_len) int32 -> FTSF rows (one chunk per sample)."""
+    assert tokens.ndim == 2
+    return store.put(tokens.astype(np.int32), layout="ftsf", tensor_id=tensor_id,
+                     chunk_dims=1, target_file_bytes=target_file_bytes)
+
+
+def hedged(fn, *, hedge_after_s: float = 0.5, attempts: int = 2):
+    """Run ``fn`` with tail-latency hedging: if the first attempt hasn't
+    finished after ``hedge_after_s``, race a duplicate; first result wins.
+    Object-store reads are idempotent, so duplicates are safe — this is the
+    classic straggler mitigation for p99 fetches on large fleets."""
+    import concurrent.futures as cf
+
+    def run():
+        ex = cf.ThreadPoolExecutor(max_workers=attempts)
+        try:
+            futures = [ex.submit(fn)]
+            done, _ = cf.wait(futures, timeout=hedge_after_s)
+            if not done and attempts > 1:
+                futures.append(ex.submit(fn))     # race a duplicate
+            done, _ = cf.wait(futures, return_when=cf.FIRST_COMPLETED)
+            return next(iter(done)).result()
+        finally:
+            ex.shutdown(wait=False)               # abandon the straggler
+
+    return run
+
+
+class FTSFLoader:
+    def __init__(self, store: DeltaTensorStore, tensor_id: str, *,
+                 batch_size: int, host_index: int = 0, n_hosts: int = 1,
+                 seed: int = 0, prefetch_depth: int = 2,
+                 start_step: int = 0, hedge_after_s: Optional[float] = None):
+        self.store = store
+        self.tid = tensor_id
+        self.batch = batch_size
+        self.host = host_index
+        self.n_hosts = n_hosts
+        self.hedge_after_s = hedge_after_s
+        n_samples = store.shape_of(tensor_id)[0]
+        self.owned = np.arange(n_samples)[host_index::n_hosts]
+        if len(self.owned) < batch_size:
+            raise ValueError("fewer owned samples than batch size")
+        self.seed = seed
+        self.step = start_step
+        self.depth = prefetch_depth
+        self._q: "queue.Queue[Tuple[int, np.ndarray]]" = queue.Queue(prefetch_depth)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # deterministic sample plan: pure function of (seed, step)
+    def _plan(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed * 1_000_003 + step) & 0x7FFFFFFF)
+        return np.sort(rng.choice(self.owned, size=self.batch, replace=False))
+
+    def _fetch(self, step: int) -> np.ndarray:
+        rows = self._plan(step)
+        # coalesce consecutive rows into range slice reads (file pruning)
+        parts = []
+        run_start = rows[0]
+        prev = rows[0]
+        for r in rows[1:]:
+            if r != prev + 1:
+                parts.append((run_start, prev + 1))
+                run_start = r
+            prev = r
+        parts.append((run_start, prev + 1))
+
+        def read(a, b):
+            fn = lambda: self.store.get_slice(self.tid, [(int(a), int(b))])
+            if self.hedge_after_s is not None:
+                return hedged(fn, hedge_after_s=self.hedge_after_s)()
+            return fn()
+
+        return np.concatenate([read(a, b) for a, b in parts], axis=0)
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self._fetch(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        while True:
+            step, tokens = self._q.get()
+            labels = np.concatenate([tokens[:, 1:],
+                                     np.full((len(tokens), 1), -1, np.int32)],
+                                    axis=1)
+            yield {"tokens": tokens, "labels": labels, "step": step}
+
+    def close(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+            self._thread = None

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's encode/decode hot loops.
+
+Structure per kernel: <name>.py holds the pl.pallas_call + BlockSpec body,
+ops.py the jit'd public wrappers (TPU: compiled; CPU: ref fallback or
+interpret=True under test), ref.py the pure-jnp oracles.
+"""
+from . import ops, ref
+from .ops import block_gather, block_norms, block_scatter, block_topk, coo_scatter
+
+__all__ = ["ops", "ref", "block_gather", "block_norms", "block_scatter",
+           "block_topk", "coo_scatter"]

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: gather K (bh, bw) tiles from a 2-D operand.
+
+BSGS encode hot loop (paper Eq. 8, t_en): selected blocks are pulled from
+HBM into VMEM one tile per grid step. The block ids ride in scalar-prefetch
+SMEM so the BlockSpec index map can steer each step's DMA — the TPU version
+of "only the necessary chunk is loaded into memory" (paper §II.A).
+
+Tiling notes (v5e): pick bh a multiple of 8 and bw a multiple of 128 so a
+tile is a whole (sublane × lane) vreg set; one (bh, bw) f32 tile of
+8×128×4 B = 4 KiB keeps the double-buffered working set far under the
+~16 MiB VMEM budget up to 512×512 blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, x_ref, o_ref, *, n_blocks: int):
+    k = pl.program_id(0)
+    valid = ids_ref[k] < n_blocks
+    tile = x_ref[...]
+    o_ref[0] = jnp.where(valid, tile, jnp.zeros_like(tile))
+
+
+def block_gather(x: jax.Array, ids: jax.Array, block_shape: Tuple[int, int],
+                 *, interpret: bool = False) -> jax.Array:
+    """x: (m, n) with m % bh == 0, n % bw == 0; ids: (K,) int32 block ids
+    (row-major over the (m//bh, n//bw) grid; id == n_blocks marks padding).
+    Returns (K, bh, bw)."""
+    bh, bw = block_shape
+    m, n = x.shape
+    assert m % bh == 0 and n % bw == 0, (x.shape, block_shape)
+    gh, gw = m // bh, n // bw
+    n_blocks = gh * gw
+    (k_sel,) = ids.shape
+
+    def x_map(k, ids_ref):
+        safe = jnp.minimum(ids_ref[k], n_blocks - 1)
+        return safe // gw, safe % gw
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k_sel,),
+        in_specs=[pl.BlockSpec((bh, bw), x_map)],
+        out_specs=pl.BlockSpec((1, bh, bw), lambda k, ids_ref: (k, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k_sel, bh, bw), x.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), x)

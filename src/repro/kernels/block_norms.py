@@ -1,0 +1,35 @@
+"""Pallas TPU kernel: per-block squared-L2 norms of a (G, B) blocked view.
+
+The bandwidth-bound half of gradient compression (block top-k): one pass
+over the gradient reading each element once, reducing every block row to a
+scalar in f32. Arithmetic intensity ~0.25 FLOP/B, so the kernel's only job
+is to keep the DMA pipeline saturated: (gt, B) input tiles stream through
+VMEM; the (gt, 1) partial results live in VMEM and flush per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _norms_kernel(bv_ref, o_ref):
+    x = bv_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(x * x, axis=1, keepdims=True)
+
+
+def block_norms(bv: jax.Array, *, tile_g: int = 8,
+                interpret: bool = False) -> jax.Array:
+    """bv: (G, B) blocked view (G % tile_g == 0). Returns (G,) f32 norms."""
+    g, b = bv.shape
+    assert g % tile_g == 0, (bv.shape, tile_g)
+    out = pl.pallas_call(
+        _norms_kernel,
+        grid=(g // tile_g,),
+        in_specs=[pl.BlockSpec((tile_g, b), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_g, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        interpret=interpret,
+    )(bv)
+    return out[:, 0]

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: COO decode — scatter nnz values into a flat buffer.
+
+GPU COO decode is an atomic scatter; TPUs have no scatter unit, but they
+have an MXU. The TPU-native adaptation: iterate output tiles sequentially
+and materialize each tile as a one-hot matmul,
+
+    out[t*T : (t+1)*T] = values @ one_hot(idx - t*T, T)
+
+i.e. a (K,) x (K, T) contraction on the MXU per tile. The full index/value
+vectors stay resident in VMEM across grid steps (K is the device codec's
+fixed capacity, <= ~128Ki f32 comfortably). Out-of-range indices — the
+padding convention of ``repro.core.device.coo_encode`` — fall outside every
+tile and drop naturally. Duplicate indices accumulate, matching
+scatter-add semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _coo_scatter_kernel(idx_ref, vals_ref, o_ref, *, tile: int):
+    t = pl.program_id(0)
+    start = t * tile
+    local = idx_ref[...] - start                     # (K,)
+    vals = vals_ref[...]
+    k = local.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (k, tile), 1)
+    onehot = (local[:, None] == cols).astype(vals.dtype)   # (K, T)
+    o_ref[...] = jnp.dot(vals[None, :], onehot,
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def coo_scatter(flat_idx: jax.Array, values: jax.Array, size: int,
+                *, tile: int = 512, interpret: bool = False) -> jax.Array:
+    """flat_idx: (K,) int32; values: (K,); returns (size,) dense.
+
+    size % tile == 0 (callers pad; tile a multiple of 128 for the MXU).
+    """
+    assert size % tile == 0, (size, tile)
+    (k,) = values.shape
+    out = pl.pallas_call(
+        functools.partial(_coo_scatter_kernel, tile=tile),
+        grid=(size // tile,),
+        in_specs=[pl.BlockSpec((k,), lambda t: (0,)),
+                  pl.BlockSpec((k,), lambda t: (0,))],
+        out_specs=pl.BlockSpec((1, tile), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((1, size), values.dtype),
+        interpret=interpret,
+    )(flat_idx.astype(jnp.int32), values)
+    return out[0]

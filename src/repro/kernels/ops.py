@@ -1,0 +1,110 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Dispatch policy: compiled Pallas on TPU; on CPU the default is the ref.py
+oracle (bit-identical semantics, fast under XLA:CPU), while
+``use_pallas=True`` forces the kernel through the Pallas interpreter —
+that is how the test suite validates the kernel bodies on this machine.
+
+All wrappers pad operands to kernel alignment (tile multiples) and crop
+the result, so callers never see the alignment constraints.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_gather import block_gather as _pl_block_gather
+from .block_norms import block_norms as _pl_block_norms
+from .block_scatter import block_scatter as _pl_block_scatter
+from .coo_scatter import coo_scatter as _pl_coo_scatter
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _decide(use_pallas: Optional[bool]) -> Tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    return use_pallas, not _on_tpu()
+
+
+def _pad2d(x: jax.Array, bh: int, bw: int) -> jax.Array:
+    m, n = x.shape
+    pm, pn = (-m) % bh, (-n) % bw
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("block_shape", "use_pallas"))
+def block_gather(x: jax.Array, ids: jax.Array, block_shape: Tuple[int, int],
+                 use_pallas: Optional[bool] = None) -> jax.Array:
+    """Gather tiles listed in ``ids`` from (possibly ragged) 2-D ``x``."""
+    pallas, interpret = _decide(use_pallas)
+    xp = _pad2d(x, *block_shape)
+    if pallas:
+        return _pl_block_gather(xp, ids, block_shape, interpret=interpret)
+    return ref.block_gather(xp, ids, block_shape)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def block_scatter(base: jax.Array, ids: jax.Array, blocks: jax.Array,
+                  use_pallas: Optional[bool] = None) -> jax.Array:
+    pallas, interpret = _decide(use_pallas)
+    bh, bw = blocks.shape[1:]
+    m, n = base.shape
+    bp = _pad2d(base, bh, bw)
+    out = (_pl_block_scatter(bp, ids, blocks, interpret=interpret)
+           if pallas else ref.block_scatter(bp, ids, blocks))
+    return out[:m, :n]
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def block_norms(bv: jax.Array, use_pallas: Optional[bool] = None) -> jax.Array:
+    pallas, interpret = _decide(use_pallas)
+    g, b = bv.shape
+    if pallas:
+        tile_g = 8
+        pg = (-g) % tile_g
+        bvp = jnp.pad(bv, ((0, pg), (0, 0))) if pg else bv
+        return _pl_block_norms(bvp, tile_g=tile_g, interpret=interpret)[:g]
+    return ref.block_norms(bv)
+
+
+@partial(jax.jit, static_argnames=("size", "use_pallas"))
+def coo_scatter(flat_idx: jax.Array, values: jax.Array, size: int,
+                use_pallas: Optional[bool] = None) -> jax.Array:
+    pallas, interpret = _decide(use_pallas)
+    if pallas:
+        tile = 512 if size >= 512 else max(128, 1 << max(size - 1, 1).bit_length())
+        padded = math.ceil(size / tile) * tile
+        out = _pl_coo_scatter(flat_idx, values, padded, tile=tile,
+                              interpret=interpret)
+        return out[:size]
+    return ref.coo_scatter(flat_idx, values, size)
+
+
+@partial(jax.jit, static_argnames=("block_shape", "k", "use_pallas"))
+def block_topk(x: jax.Array, block_shape: Tuple[int, int], k: int,
+               use_pallas: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """(ids, blocks) of the k highest-energy tiles — gradient compression."""
+    pallas, interpret = _decide(use_pallas)
+    bh, bw = block_shape
+    xp = _pad2d(x, bh, bw)
+    m, n = xp.shape
+    gh, gw = m // bh, n // bw
+    bv = xp.reshape(gh, bh, gw, bw).transpose(0, 2, 1, 3).reshape(gh * gw, bh * bw)
+    norms = block_norms(bv, use_pallas=use_pallas)
+    _, ids = jax.lax.top_k(norms, k)
+    ids = ids.astype(jnp.int32)
+    blocks = (block_gather(xp, ids, block_shape, use_pallas=use_pallas)
+              if pallas else ref.block_gather(xp, ids, block_shape))
+    return ids, blocks

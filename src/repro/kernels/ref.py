@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are asserted
+against (tests sweep shapes/dtypes with assert_allclose). They are also
+the CPU fallback used by ops.py when not running on TPU hardware.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def block_gather(x: jax.Array, ids: jax.Array, block_shape: Tuple[int, int]) -> jax.Array:
+    """Gather K (bh, bw) tiles from a 2-D operand.
+
+    ids are flattened block-grid indices (row-major over the grid); an id
+    == n_blocks marks padding and yields a zero tile.
+    """
+    bh, bw = block_shape
+    m, n = x.shape
+    gh, gw = m // bh, n // bw
+    n_blocks = gh * gw
+    bv = x.reshape(gh, bh, gw, bw).transpose(0, 2, 1, 3).reshape(n_blocks, bh, bw)
+    valid = ids < n_blocks
+    safe = jnp.clip(ids, 0, n_blocks - 1)
+    out = bv[safe]
+    return jnp.where(valid[:, None, None], out, 0)
+
+
+def block_scatter(base: jax.Array, ids: jax.Array, blocks: jax.Array) -> jax.Array:
+    """Write K (bh, bw) tiles into ``base`` at flattened grid positions.
+
+    Padding ids (>= n_blocks) are dropped. Duplicate ids are unsupported
+    (BSGS block ids are unique by construction).
+    """
+    k, bh, bw = blocks.shape
+    m, n = base.shape
+    gh, gw = m // bh, n // bw
+    n_blocks = gh * gw
+    bv = base.reshape(gh, bh, gw, bw).transpose(0, 2, 1, 3).reshape(n_blocks, bh, bw)
+    bv = bv.at[ids].set(blocks.astype(base.dtype), mode="drop")
+    return bv.reshape(gh, gw, bh, bw).transpose(0, 2, 1, 3).reshape(m, n)
+
+
+def block_norms(bv: jax.Array) -> jax.Array:
+    """Squared-L2 per row of a (G, B) blocked view, accumulated in f32."""
+    return jnp.sum(jnp.square(bv.astype(jnp.float32)), axis=-1)
+
+
+def coo_scatter(flat_idx: jax.Array, values: jax.Array, size: int) -> jax.Array:
+    """Scatter nnz values into a flat dense buffer (COO decode).
+
+    Out-of-range indices (the fixed-capacity padding convention) drop.
+    """
+    out = jnp.zeros((size,), dtype=values.dtype)
+    return out.at[flat_idx].add(values, mode="drop")
+
+
+def block_topk(x: jax.Array, block_shape: Tuple[int, int], k: int):
+    """Top-k blocks by energy: (ids, blocks) — the gradient-compression path."""
+    bh, bw = block_shape
+    m, n = x.shape
+    gh, gw = m // bh, n // bw
+    bv = x.reshape(gh, bh, gw, bw).transpose(0, 2, 1, 3).reshape(gh * gw, bh * bw)
+    norms = block_norms(bv)
+    _, ids = jax.lax.top_k(norms, k)
+    return ids.astype(jnp.int32), block_gather(x, ids.astype(jnp.int32), block_shape)

@@ -1,0 +1,11 @@
+from .object_store import (InMemoryObjectStore, LatencyModel, LocalFSObjectStore,
+                           ObjectNotFoundError, ObjectStore, PutIfAbsentError)
+from .log import CommitConflict, DeltaLog, Snapshot
+from .table import DeltaTable
+from . import columnar
+
+__all__ = [
+    "InMemoryObjectStore", "LatencyModel", "LocalFSObjectStore", "ObjectStore",
+    "ObjectNotFoundError", "PutIfAbsentError", "CommitConflict", "DeltaLog",
+    "Snapshot", "DeltaTable", "columnar",
+]

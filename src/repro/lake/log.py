@@ -1,0 +1,195 @@
+"""Delta-style transaction log over an object store.
+
+Faithful to the Delta Lake protocol shape (Armbrust et al., VLDB'20) at the
+scale this framework needs:
+
+* a table is a directory; its state is the ordered list of JSON commit files
+  ``_delta_log/<version>.json``; each commit holds actions
+  (``metaData`` / ``add`` / ``remove`` / ``commitInfo``), one JSON per line;
+* a commit is atomic: put-if-absent of the next version file. Losers of the
+  race retry on top of the new snapshot (optimistic concurrency). A writer
+  that crashes after uploading data files but before the commit leaves no
+  visible change — this is the checkpoint/restart safety story;
+* every N commits a checkpoint file snapshots the live file list so readers
+  replay O(N) recent commits, not the whole history;
+* time travel = replay to an explicit version.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+from .object_store import ObjectStore, ObjectNotFoundError, PutIfAbsentError
+
+CHECKPOINT_INTERVAL = 10
+
+
+def _log_key(table: str, version: int) -> str:
+    return f"{table}/_delta_log/{version:020d}.json"
+
+
+def _ckpt_key(table: str, version: int) -> str:
+    return f"{table}/_delta_log/{version:020d}.checkpoint.json"
+
+
+def _last_ckpt_key(table: str) -> str:
+    return f"{table}/_delta_log/_last_checkpoint"
+
+
+@dataclass
+class Snapshot:
+    """Materialized table state at one version."""
+
+    version: int
+    metadata: Dict[str, Any]
+    files: Dict[str, Dict[str, Any]]  # path -> add action payload
+
+    def add_actions(self) -> List[Dict[str, Any]]:
+        return [dict(a, path=p) for p, a in sorted(self.files.items())]
+
+
+class CommitConflict(Exception):
+    pass
+
+
+class DeltaLog:
+    def __init__(self, store: ObjectStore, table_path: str):
+        self.store = store
+        self.table = table_path.rstrip("/")
+        # log files are immutable: a version's snapshot never changes, so
+        # replayed snapshots are cached for the life of the client
+        self._snap_cache: Dict[int, Snapshot] = {}
+
+    # -- write side ---------------------------------------------------------
+
+    def commit(self, actions: List[Dict[str, Any]], *, expected_version: Optional[int] = None,
+               op: str = "WRITE", max_retries: int = 20) -> int:
+        """Atomically append one commit; returns the committed version.
+
+        With ``expected_version`` the commit only succeeds against exactly
+        that snapshot (serializable writers, e.g. checkpoint step fencing);
+        otherwise losers rebase and retry (append-only commits commute).
+        """
+        attempt = 0
+        while True:
+            latest = self.latest_version()
+            if expected_version is not None and latest != expected_version:
+                raise CommitConflict(
+                    f"expected v{expected_version}, found v{latest}")
+            version = latest + 1
+            payload = "\n".join(
+                json.dumps(a, separators=(",", ":"))
+                for a in actions + [{"commitInfo": {"op": op, "ts": time.time()}}])
+            try:
+                self.store.put(_log_key(self.table, version),
+                               payload.encode("utf-8"), if_absent=True)
+            except PutIfAbsentError:
+                attempt += 1
+                if expected_version is not None or attempt > max_retries:
+                    raise CommitConflict(f"lost commit race at v{version}")
+                continue
+            if version % CHECKPOINT_INTERVAL == 0:
+                self._write_checkpoint(version)
+            return version
+
+    def _write_checkpoint(self, version: int) -> None:
+        snap = self.snapshot(version)
+        body = json.dumps({
+            "version": version,
+            "metadata": snap.metadata,
+            "files": snap.files,
+        }, separators=(",", ":")).encode("utf-8")
+        self.store.put(_ckpt_key(self.table, version), body)
+        self.store.put(_last_ckpt_key(self.table),
+                       json.dumps({"version": version}).encode("utf-8"))
+
+    # -- read side ----------------------------------------------------------
+
+    def latest_version(self) -> int:
+        """-1 when the table does not exist yet."""
+        latest = -1
+        prefix = f"{self.table}/_delta_log/"
+        for key in self.store.list(prefix):
+            name = key[len(prefix):]
+            if name.endswith(".json") and not name.endswith(".checkpoint.json"):
+                try:
+                    latest = max(latest, int(name[:-5]))
+                except ValueError:
+                    continue
+        return latest
+
+    def _checkpoint_at_or_before(self, version: int) -> Optional[Dict[str, Any]]:
+        try:
+            ptr = json.loads(self.store.get(_last_ckpt_key(self.table)))
+            v = ptr["version"]
+            if v <= version:
+                return json.loads(self.store.get(_ckpt_key(self.table, v)))
+        except (ObjectNotFoundError, KeyError, json.JSONDecodeError):
+            pass
+        # fall back: scan for any usable checkpoint
+        best = None
+        prefix = f"{self.table}/_delta_log/"
+        for key in self.store.list(prefix):
+            if key.endswith(".checkpoint.json"):
+                v = int(key[len(prefix):-len(".checkpoint.json")])
+                if v <= version and (best is None or v > best):
+                    best = v
+        if best is not None:
+            return json.loads(self.store.get(_ckpt_key(self.table, best)))
+        return None
+
+    def snapshot(self, version: Optional[int] = None) -> Snapshot:
+        latest = self.latest_version()
+        if latest < 0:
+            raise ObjectNotFoundError(f"no delta table at {self.table}")
+        version = latest if version is None else version
+        if version > latest:
+            raise ValueError(f"time travel to v{version} but latest is v{latest}")
+        cached = self._snap_cache.get(version)
+        if cached is not None:
+            return cached
+
+        metadata: Dict[str, Any] = {}
+        files: Dict[str, Dict[str, Any]] = {}
+        start = 0
+        ckpt = self._checkpoint_at_or_before(version)
+        if ckpt:
+            metadata = ckpt["metadata"]
+            files = dict(ckpt["files"])
+            start = ckpt["version"] + 1
+
+        for v in range(start, version + 1):
+            try:
+                body = self.store.get(_log_key(self.table, v)).decode("utf-8")
+            except ObjectNotFoundError:
+                continue  # gaps cannot happen via commit(); tolerate anyway
+            for line in body.splitlines():
+                if not line:
+                    continue
+                action = json.loads(line)
+                if "metaData" in action:
+                    metadata = action["metaData"]
+                elif "add" in action:
+                    a = dict(action["add"])
+                    files[a.pop("path")] = a
+                elif "remove" in action:
+                    files.pop(action["remove"]["path"], None)
+        snap = Snapshot(version=version, metadata=metadata, files=files)
+        self._snap_cache[version] = snap
+        if len(self._snap_cache) > 64:
+            self._snap_cache.pop(next(iter(self._snap_cache)))
+        return snap
+
+    def history(self) -> Iterator[Dict[str, Any]]:
+        for v in range(self.latest_version() + 1):
+            try:
+                body = self.store.get(_log_key(self.table, v)).decode("utf-8")
+            except ObjectNotFoundError:
+                continue
+            for line in body.splitlines():
+                action = json.loads(line)
+                if "commitInfo" in action:
+                    yield dict(action["commitInfo"], version=v)

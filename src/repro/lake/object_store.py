@@ -1,0 +1,207 @@
+"""Object-store abstraction underneath the delta log.
+
+Cloud object stores (S3/GCS/ABS) are immutable key-value stores with
+put / get / list / delete and (on some providers) put-if-absent. The delta
+log only needs those five verbs, so the whole lake runs against this
+interface. Two implementations:
+
+* ``LocalFSObjectStore`` — keys are files under a root dir; put-if-absent is
+  ``O_CREAT|O_EXCL`` (atomic on POSIX), which is how delta-on-HDFS commits.
+* ``InMemoryObjectStore`` — dict-backed, with an optional latency/bandwidth
+  model so benchmarks can reproduce the paper's 1 Gbps object-store setting
+  on a CPU box (per-request RTT + bytes/bandwidth sleep, or virtual-clock
+  accounting when ``virtual_clock=True`` so benchmarks don't actually sleep).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, Optional
+
+
+class PutIfAbsentError(Exception):
+    """Raised when a conditional put loses the race (key already exists)."""
+
+
+class ObjectNotFoundError(KeyError):
+    pass
+
+
+class ObjectStore:
+    """Interface: immutable blobs addressed by '/'-separated string keys."""
+
+    def put(self, key: str, data: bytes, *, if_absent: bool = False) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        try:
+            self.head(key)
+            return True
+        except ObjectNotFoundError:
+            return False
+
+    def head(self, key: str) -> int:
+        """Size in bytes; raises ObjectNotFoundError."""
+        raise NotImplementedError
+
+
+class LocalFSObjectStore(ObjectStore):
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        p = os.path.normpath(os.path.join(self.root, key))
+        if not p.startswith(self.root):
+            raise ValueError(f"key escapes root: {key!r}")
+        return p
+
+    def put(self, key: str, data: bytes, *, if_absent: bool = False) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        if if_absent:
+            # O_EXCL gives atomic put-if-absent on POSIX — the delta commit
+            # primitive. No tmp+rename: rename would clobber a racer.
+            try:
+                fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644)
+            except FileExistsError as e:
+                raise PutIfAbsentError(key) from e
+            try:
+                os.write(fd, data)
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+        else:
+            tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+
+    def get(self, key: str) -> bytes:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError as e:
+            raise ObjectNotFoundError(key) from e
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        base = self.root
+        out = []
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in filenames:
+                if fn.endswith(".tmp") or ".tmp." in fn:
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn), base)
+                rel = rel.replace(os.sep, "/")
+                if rel.startswith(prefix):
+                    out.append(rel)
+        return iter(sorted(out))
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def head(self, key: str) -> int:
+        try:
+            return os.stat(self._path(key)).st_size
+        except FileNotFoundError as e:
+            raise ObjectNotFoundError(key) from e
+
+
+@dataclass
+class LatencyModel:
+    """Paper setting: 1 Gbps network, object-store request overhead.
+
+    ``rtt_s`` is charged per request; payload bytes are charged at
+    ``bandwidth_bps``. With ``virtual_clock`` the cost is accumulated in
+    ``elapsed_s`` instead of sleeping, so benchmarks measure modeled I/O time
+    plus real encode/decode CPU time separately.
+    """
+
+    rtt_s: float = 0.010
+    bandwidth_bps: float = 1e9  # 1 Gbps, as in the paper's testbed
+    virtual_clock: bool = True
+    elapsed_s: float = 0.0
+    requests: int = 0
+    bytes_moved: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def charge(self, nbytes: int) -> None:
+        cost = self.rtt_s + (nbytes * 8.0) / self.bandwidth_bps
+        with self._lock:
+            self.elapsed_s += cost
+            self.requests += 1
+            self.bytes_moved += nbytes
+        if not self.virtual_clock:
+            time.sleep(cost)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.elapsed_s = 0.0
+            self.requests = 0
+            self.bytes_moved = 0
+
+
+class InMemoryObjectStore(ObjectStore):
+    def __init__(self, latency: Optional[LatencyModel] = None,
+                 fail_after_puts: Optional[int] = None):
+        self._data: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.latency = latency
+        # Fault-injection hook: raise IOError after N puts (tests crash-mid-
+        # checkpoint recovery).
+        self.fail_after_puts = fail_after_puts
+        self._puts = 0
+
+    def put(self, key: str, data: bytes, *, if_absent: bool = False) -> None:
+        if self.latency:
+            self.latency.charge(len(data))
+        with self._lock:
+            if self.fail_after_puts is not None and self._puts >= self.fail_after_puts:
+                raise IOError(f"injected fault after {self._puts} puts")
+            if if_absent and key in self._data:
+                raise PutIfAbsentError(key)
+            self._data[key] = bytes(data)
+            self._puts += 1
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            if key not in self._data:
+                raise ObjectNotFoundError(key)
+            data = self._data[key]
+        if self.latency:
+            self.latency.charge(len(data))
+        return data
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        if self.latency:
+            self.latency.charge(0)
+        with self._lock:
+            keys = sorted(k for k in self._data if k.startswith(prefix))
+        return iter(keys)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def head(self, key: str) -> int:
+        with self._lock:
+            if key not in self._data:
+                raise ObjectNotFoundError(key)
+            return len(self._data[key])

@@ -1,0 +1,213 @@
+"""DeltaTable — append/scan over parq-lite files tracked by the delta log.
+
+Data skipping: every ``add`` action carries per-column min/max stats from
+``columnar.write_table``; ``scan(filters=...)`` prunes whole files whose
+[min,max] envelope misses the predicate before any byte of data is fetched.
+That file-pruning is the mechanism behind the paper's read-slice wins: a
+slice of tensor rows touches only the files whose chunk_index range overlaps
+the slice.
+"""
+
+from __future__ import annotations
+
+import uuid
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import columnar
+from .log import DeltaLog, Snapshot
+from .object_store import ObjectStore
+
+# filter := {column: (lo, hi)} inclusive range; None bound = open
+Filters = Dict[str, Tuple[Optional[float], Optional[float]]]
+
+
+def _file_overlaps(add: Dict[str, Any], filters: Optional[Filters]) -> bool:
+    if not filters:
+        return True
+    stats = add.get("stats", {}).get("column_stats", {})
+    for col, (lo, hi) in filters.items():
+        st = stats.get(col)
+        if st is None:
+            continue  # no stats -> cannot prune
+        if lo is not None and st["max"] < lo:
+            return False
+        if hi is not None and st["min"] > hi:
+            return False
+    return True
+
+
+def _row_mask(batch: Dict[str, Any], filters: Optional[Filters]) -> Optional[np.ndarray]:
+    if not filters:
+        return None
+    mask = None
+    for col, (lo, hi) in filters.items():
+        if col not in batch:
+            continue
+        v = batch[col]
+        if not isinstance(v, np.ndarray) or v.dtype.kind not in "iuf":
+            continue
+        m = np.ones(len(v), dtype=bool)
+        if lo is not None:
+            m &= v >= lo
+        if hi is not None:
+            m &= v <= hi
+        mask = m if mask is None else (mask & m)
+    return mask
+
+
+def _apply_mask(batch: Dict[str, Any], mask: Optional[np.ndarray]) -> Dict[str, Any]:
+    if mask is None or mask.all():
+        return batch
+    out = {}
+    idx = np.flatnonzero(mask)
+    for k, v in batch.items():
+        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
+            out[k] = v[idx]
+        else:
+            out[k] = [v[i] for i in idx]
+    return out
+
+
+class DeltaTable:
+    def __init__(self, store: ObjectStore, path: str):
+        self.store = store
+        self.path = path.rstrip("/")
+        self.log = DeltaLog(store, self.path)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @classmethod
+    def create(cls, store: ObjectStore, path: str,
+               metadata: Optional[Dict[str, Any]] = None) -> "DeltaTable":
+        t = cls(store, path)
+        if t.exists():
+            return t
+        t.log.commit([{"metaData": metadata or {}}], op="CREATE TABLE")
+        return t
+
+    def exists(self) -> bool:
+        return self.log.latest_version() >= 0
+
+    def version(self) -> int:
+        return self.log.latest_version()
+
+    # -- write ----------------------------------------------------------------
+
+    def append(self, columns: Dict[str, Any], *, partition_values: Optional[Dict[str, str]] = None,
+               commit: bool = True) -> Dict[str, Any]:
+        """Write one parq-lite file; optionally defer the commit.
+
+        With ``commit=False`` the data file is uploaded but invisible; the
+        returned add-action must be passed to :meth:`commit_adds` later.
+        This two-phase path is what the distributed checkpointer uses:
+        every host uploads its shard files, then a single coordinator commit
+        makes the checkpoint atomic.
+        """
+        data, stats = columnar.write_table(columns)
+        fname = f"part-{uuid.uuid4().hex}.pql"
+        self.store.put(f"{self.path}/{fname}", data)
+        add = {"path": fname, "size": len(data), "stats": stats,
+               "partitionValues": partition_values or {}, "dataChange": True}
+        if commit:
+            self.log.commit([{"add": add}], op="WRITE")
+        return add
+
+    def commit_adds(self, adds: List[Dict[str, Any]], *, removes: Sequence[str] = (),
+                    op: str = "WRITE") -> int:
+        actions: List[Dict[str, Any]] = [{"add": a} for a in adds]
+        actions += [{"remove": {"path": p}} for p in removes]
+        return self.log.commit(actions, op=op)
+
+    # -- read -----------------------------------------------------------------
+
+    def scan(self, columns: Optional[Sequence[str]] = None, *,
+             filters: Optional[Filters] = None,
+             partition_filters: Optional[Dict[str, str]] = None,
+             version: Optional[int] = None,
+             prune_only: bool = False) -> Iterator[Dict[str, Any]]:
+        """Yield column batches (one per surviving data file)."""
+        snap = self.log.snapshot(version)
+        for add in snap.add_actions():
+            if partition_filters:
+                pv = add.get("partitionValues", {})
+                if any(pv.get(k) != v for k, v in partition_filters.items()):
+                    continue
+            if not _file_overlaps(add, filters):
+                continue
+            if prune_only:
+                yield {"__path__": add["path"], "__size__": add["size"]}
+                continue
+            data = self.store.get(f"{self.path}/{add['path']}")
+            batch = columnar.read_table(data, columns)
+            yield _apply_mask(batch, _row_mask(batch, filters))
+
+    def read_all(self, columns: Optional[Sequence[str]] = None, *,
+                 filters: Optional[Filters] = None,
+                 partition_filters: Optional[Dict[str, str]] = None,
+                 version: Optional[int] = None) -> Dict[str, Any]:
+        """Concatenate all surviving batches into one column dict."""
+        batches = list(self.scan(columns, filters=filters,
+                                 partition_filters=partition_filters, version=version))
+        if not batches:
+            return {}
+        out: Dict[str, Any] = {}
+        for key in batches[0]:
+            vals = [b[key] for b in batches if key in b]
+            if vals and isinstance(vals[0], np.ndarray) and vals[0].dtype.kind != "O":
+                out[key] = np.concatenate(vals)
+            else:
+                merged: List[Any] = []
+                for v in vals:
+                    merged.extend(v)
+                out[key] = merged
+        return out
+
+    def files(self, version: Optional[int] = None) -> List[Dict[str, Any]]:
+        return self.log.snapshot(version).add_actions()
+
+    def total_bytes(self, version: Optional[int] = None) -> int:
+        return sum(a["size"] for a in self.files(version))
+
+    def snapshot(self, version: Optional[int] = None) -> Snapshot:
+        return self.log.snapshot(version)
+
+    # -- maintenance -----------------------------------------------------------
+
+    def compact(self, max_rows_per_file: int = 1 << 20) -> int:
+        """Rewrite small files into bigger ones (single commit)."""
+        snap = self.log.snapshot()
+        batches, removes = [], []
+        for add in snap.add_actions():
+            data = self.store.get(f"{self.path}/{add['path']}")
+            batches.append(columnar.read_table(data))
+            removes.append(add["path"])
+        if not batches:
+            return snap.version
+        merged: Dict[str, Any] = {}
+        for key in batches[0]:
+            vals = [b[key] for b in batches]
+            if isinstance(vals[0], np.ndarray) and vals[0].dtype.kind != "O":
+                merged[key] = np.concatenate(vals)
+            else:
+                acc: List[Any] = []
+                for v in vals:
+                    acc.extend(v)
+                merged[key] = acc
+        add = self.append(merged, commit=False)
+        return self.commit_adds([add], removes=removes, op="OPTIMIZE")
+
+    def vacuum(self) -> int:
+        """Delete unreferenced data files (expired by remove actions)."""
+        live = {a["path"] for a in self.files()}
+        n = 0
+        prefix = f"{self.path}/"
+        for key in list(self.store.list(prefix)):
+            rel = key[len(prefix):]
+            if rel.startswith("_delta_log/"):
+                continue
+            if rel not in live:
+                self.store.delete(key)
+                n += 1
+        return n

@@ -1,0 +1,212 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+Defines the 4 assigned shape cells and, per (arch × cell), the function to
+lower (train_step / prefill / decode), its abstract inputs (weak-type-
+correct, shardable, no device allocation — built with jax.eval_shape), and
+NamedShardings for every input. Skip rules (documented in DESIGN.md §5):
+
+* long_500k only for sub-quadratic archs (SSM/hybrid/SWA);
+* SWA archs serve long_500k with a ring-buffer KV cache of window size
+  (a full 500k replicated cache would not fit HBM — the ring buffer IS
+  the windowed-attention serving design);
+* glm4-style tiny-kv caches shard their sequence dim over `model` when
+  heads don't divide (sequence-parallel KV).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist import sharding as shd
+from ..models import transformer
+from ..models.config import ArchConfig, get_arch
+from ..train import optimizer as opt, trainer
+
+SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode"},
+}
+
+OCFG = opt.OptConfig()
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    fn: Callable                       # function to jit/lower
+    args: Tuple[Any, ...]              # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    note: str = ""
+
+
+def cell_applicable(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch: 500k decode needs sub-quadratic "
+                       "attention (skip per assignment)")
+    if shape.startswith(("decode", "long")) and not cfg.supports_decode:
+        return False, "no decode step for this arch"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, b: int, t: int) -> Dict[str, Any]:
+    out = {"tokens": _sds((b, t), jnp.int32), "labels": _sds((b, t), jnp.int32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "audio":
+        out["encoder_frames"] = _sds((b, t // cfg.encoder_seq_divisor,
+                                      cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _extra_inputs(batch: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+
+
+def _batch_shardings(batch: Dict[str, Any], mesh: Mesh):
+    axes = shd.batch_axes(mesh)
+
+    def spec(v):
+        b = v.shape[0]
+        ax = axes if b % int(np.prod([mesh.shape[a] for a in axes])) == 0 else ()
+        return NamedSharding(mesh, P(ax if ax else None,
+                                     *([None] * (len(v.shape) - 1))))
+    return {k: spec(v) for k, v in batch.items()}
+
+
+def _cache_shardings(caches: Any, cfg: ArchConfig, mesh: Mesh, batch: int):
+    """Name-aware serve-state partitioner.
+
+    Batch dim: the unique dim equal to the serve batch (sharded over the
+    data axes when divisible). Model axis preference per leaf kind:
+    KV caches try heads → head_dim → seq (seq-parallel KV is the fallback
+    for tiny-kv archs like glm4); SSM matrix states try ssm-heads → P → N;
+    conv/slstm states shard channels.
+    """
+    axes = shd.batch_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in axes]))
+    msize = mesh.shape[shd.MODEL]
+
+    def leaf_spec(path, leaf):
+        name = shd._path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * nd
+        # batch dim = first dim whose extent equals the serve batch
+        bdim = next((d for d in range(nd) if leaf.shape[d] == batch), None)
+        if bdim is not None and batch % dsize == 0 and "index" not in name:
+            spec[bdim] = axes
+        leaf_name = name.rsplit("/", 1)[-1]
+        if leaf_name in ("k", "v") and nd >= 4:
+            # heads first; then SEQUENCE (flash-decode style partial
+            # softmax: reductions over the sharded seq dim are cheap under
+            # GSPMD) — head_dim last (contraction sharding forced big
+            # score all-reduces in the baseline)
+            prefs = [nd - 2, nd - 3, nd - 1]
+        elif leaf_name in ("ssd", "s") and nd >= 4:
+            prefs = [nd - 3, nd - 1, nd - 2]      # ssm heads, P, N
+        elif leaf_name in ("conv", "c", "n", "h", "enc_out"):
+            prefs = [nd - 1]
+        else:
+            prefs = sorted(range(nd), key=lambda d: -leaf.shape[d])
+        for d in prefs:
+            if 0 <= d < nd and spec[d] is None and leaf.shape[d] % msize == 0 \
+                    and leaf.shape[d] >= msize:
+                spec[d] = shd.MODEL
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+
+def make_cell(arch: str, shape: str, mesh: Mesh) -> Cell:
+    cfg = get_arch(arch)
+    info = SHAPES[shape]
+    t, b = info["seq_len"], info["global_batch"]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch}×{shape} skipped: {why}")
+
+    if info["kind"] == "train":
+        batch = batch_specs(cfg, b, t)
+        state = jax.eval_shape(lambda: trainer.init_state(cfg, jax.random.key(0)))
+        st_sh = trainer.state_shardings(state, cfg, mesh)
+        b_sh = _batch_shardings(batch, mesh)
+        fn = trainer.make_train_step(cfg, OCFG, mesh)
+        return Cell(arch, shape, fn, (state, batch), (st_sh, b_sh),
+                    (st_sh, None), donate=(0,))
+
+    if info["kind"] == "prefill":
+        batch = batch_specs(cfg, b, t)
+        extra = _extra_inputs(batch)
+        enc_len = t // cfg.encoder_seq_divisor if cfg.family == "audio" else 1
+        caches = jax.eval_shape(
+            lambda: transformer.init_caches(cfg, b, t, enc_len=enc_len))
+        params = jax.eval_shape(
+            lambda: transformer.init_params(cfg, jax.random.key(0)))
+        p_sh = shd.params_shardings(params, cfg, mesh)
+        c_sh = _cache_shardings(caches, cfg, mesh, b)
+        tok_sh = _batch_shardings({"tokens": batch["tokens"]}, mesh)["tokens"]
+        e_sh = _batch_shardings(extra, mesh)
+
+        def fn(params, tokens, caches, extra):
+            return transformer.prefill(params, cfg, tokens, caches,
+                                       last_logits_only=True, **extra)
+
+        return Cell(arch, shape, fn,
+                    (params, batch["tokens"], caches, extra),
+                    (p_sh, tok_sh, c_sh, e_sh),
+                    (None, c_sh, None), donate=(2,))
+
+    # decode
+    ring = (cfg.window is not None and shape == "long_500k")
+    cache_len = cfg.window if ring else t
+    enc_len = t // cfg.encoder_seq_divisor if cfg.family == "audio" else 1
+    # cap whisper decode cache at its design length? keep assigned t.
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, b, cache_len, enc_len=enc_len))
+    # decode from a (traced) fully-occupied cache
+    params = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.key(0)))
+    batch = batch_specs(cfg, b, 1)
+    extra = _extra_inputs(batch)
+    # enc-dec decode reads encoder states from caches["enc_out"], not inputs
+    extra.pop("encoder_frames", None)
+    p_sh = shd.params_shardings(params, cfg, mesh)
+    c_sh = _cache_shardings(caches, cfg, mesh, b)
+    tok_sh = _batch_shardings({"tokens": batch["tokens"]}, mesh)["tokens"]
+    e_sh = _batch_shardings(extra, mesh)
+
+    def fn(params, token, caches, extra):
+        return transformer.decode_step(params, cfg, token, caches, **extra)
+
+    note = f"ring-buffer KV (window={cfg.window})" if ring else ""
+    return Cell(arch, shape, fn,
+                (params, batch["tokens"], caches, extra),
+                (p_sh, tok_sh, c_sh, e_sh),
+                (None, c_sh, None), donate=(2,), note=note)

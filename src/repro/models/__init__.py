@@ -1,0 +1,5 @@
+from .config import ArchConfig, get_arch, list_archs, register_arch
+from . import attention, layers, moe, ssm, transformer
+
+__all__ = ["ArchConfig", "get_arch", "list_archs", "register_arch",
+           "attention", "layers", "moe", "ssm", "transformer"]

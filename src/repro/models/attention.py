@@ -1,0 +1,226 @@
+"""Attention: GQA + RoPE + sliding-window + cross-attn + KV-cache decode.
+
+Training/prefill use a chunked flash formulation in pure JAX: an outer
+``lax.map`` over query tiles and an inner ``lax.scan`` over KV tiles with
+running (max, denom, acc) in f32. Nothing O(T·S) is ever materialized, so
+the 32k-prefill cells fit HBM and XLA fuses the tile body; tile sizes are
+config knobs (``attn_chunk_q/kv``) aligned to MXU shapes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, S_max, Hkv, Dh)
+    v: jax.Array   # (B, S_max, Hkv, Dh)
+
+
+def attn_init(key, cfg: ArchConfig, dtype, d_model: Optional[int] = None,
+              kv_d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    dkv = kv_d_model or d
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k2, dkv, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, dkv, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _project_qkv(p: Params, x: jax.Array, kv_x: jax.Array, cfg: ArchConfig):
+    b, t, _ = x.shape
+    s = kv_x.shape[1]
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, t, cfg.n_heads, hd)
+    k = (kv_x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (kv_x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, chunk_q: int = 512,
+                    chunk_kv: int = 1024) -> jax.Array:
+    """q: (B,T,Hq,Dh); k/v: (B,S,Hkv,Dh) with Hq % Hkv == 0. Returns (B,T,Hq,Dh)."""
+    b, t, hq, dh = q.shape
+    s0, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    cq = min(chunk_q, t)
+    ck = min(chunk_kv, s0)
+    t0 = t
+    pad_t = (-t) % cq
+    if pad_t:  # ragged prompt lengths: pad queries, slice the rows off below
+        q = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        t = t0 + pad_t
+    pad_s = (-s0) % ck
+    if pad_s:  # ragged cache length: pad keys, mask below by k_pos >= s0
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    s = s0 + pad_s
+    nq, nk = t // cq, s // ck
+
+    # full-head form: q keeps its Hq dim (shardable over `model` when
+    # Hq % model == 0 — the GQA (Hkv, G) reshape broke that sharding and
+    # made GSPMD all-gather a KV tile per scan step: 164k tile gathers /
+    # 1.4 TB on the 32k-prefill cell before this change). KV tiles are
+    # broadcast to Hq inside the tile body (free under sharding: each
+    # shard expands only its local head group).
+    from ..dist.sharding import constrain
+    q = constrain(q, ["batch", None, "model", None])
+    k = constrain(k, ["batch", None, "model", None])  # replicated if kv%16
+    v = constrain(v, ["batch", None, "model", None])
+    qc = jnp.moveaxis(q.reshape(b, nq, cq, hq, dh), 1, 0)   # (nq,B,cq,Hq,Dh)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, hkv, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, hkv, dh), 1, 0)
+
+    def q_block(args):
+        qi, q_i = args                                # q_i: (B, cq, Hq, Dh)
+        q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_j, v_j = inp
+            k_pos = kj * ck + jnp.arange(ck)
+            k_rep = jnp.repeat(k_j, g, axis=2)        # (B, ck, Hq, Dh)
+            v_rep = jnp.repeat(v_j, g, axis=2)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_rep,
+                            preferred_element_type=jnp.float32) * scale
+            keep = jnp.broadcast_to((k_pos < s0)[None, :], (cq, ck))
+            if causal:
+                keep &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                keep &= q_pos[:, None] - k_pos[None, :] < window
+            sc = jnp.where(keep, sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            # mask again after the subtraction: a fully-masked tile has
+            # sc == m_new == NEG_INF and exp(0) would leak 1s
+            p = jnp.exp(sc - m_new[..., None]) * keep
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_rep.dtype), v_rep,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, cq), jnp.float32)
+        a0 = jnp.zeros((b, hq, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,Hq,cq,Dh)
+        return jnp.moveaxis(out, 2, 1)                 # (B,cq,Hq,Dh)
+
+    if nq == 1:
+        out = q_block((jnp.asarray(0), qc[0]))[:, None]
+    else:
+        out = jax.lax.map(q_block, (jnp.arange(nq), qc))   # (nq,B,cq,Hq,Dh)
+        out = jnp.moveaxis(out, 0, 1)
+    out = out.reshape(b, t, hq, dh)
+    return out[:, :t0].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, cache: KVCache, cache_len: jax.Array, *,
+                     window: Optional[int] = None,
+                     ring: bool = False) -> jax.Array:
+    """One-token attention over a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, Hq, Dh); cache arrays (B, S, Hkv, Dh); cache_len = number of
+    valid entries — a scalar or per-slot (B,) vector (the new token's k/v
+    already written at cache_len-1).
+    """
+    b, _, hq, dh = q.shape
+    s, hkv = cache.k.shape[1], cache.k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, hkv, g, dh)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qg, cache.k,
+                    preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    clen = jnp.reshape(cache_len, (-1, 1)) if jnp.ndim(cache_len) else cache_len
+    if ring:
+        # ring buffer of width s (== window): slot i holds absolute position
+        # p - ((p - i) mod s); early steps (abs < 0) are empty
+        p_cur = clen - 1
+        abs_pos = p_cur - jnp.mod(p_cur - pos[None, :], s)
+        keep = jnp.broadcast_to(abs_pos >= 0, (b, s))
+    else:
+        keep = jnp.broadcast_to(pos[None, :] < clen, (b, s))
+        if window is not None:
+            keep &= pos[None, :] >= clen - window
+    sc = jnp.where(keep[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def attn_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
+               positions: jax.Array,
+               kv_x: Optional[jax.Array] = None,
+               causal: bool = True,
+               window: Optional[int] = None,
+               use_rope: bool = True,
+               cache: Optional[KVCache] = None,
+               cache_index: Optional[jax.Array] = None,
+               ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Self- or cross-attention; prefill (cache returned filled) or decode.
+
+    * training:      cache=None, cache_index=None
+    * prefill:       cache=empty KVCache, cache_index=0 — fills [0, T)
+    * decode:        cache=filled, cache_index=current length; x is (B,1,D)
+    * cross-attn:    kv_x = encoder/image states; use_rope=False, causal=False
+    """
+    cross = kv_x is not None
+    q, k, v = _project_qkv(p, x, kv_x if cross else x, cfg)
+    if use_rope and not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    elif use_rope and cross:
+        q = rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and not cross:
+        s_max = cache.k.shape[1]
+        # ring mode: windowed attention serving with a window-sized cache
+        ring = window is not None and s_max <= window
+        widx = jnp.mod(cache_index, s_max) if ring else cache_index
+        if jnp.ndim(cache_index) == 1 and x.shape[1] == 1:
+            # per-slot decode write (continuous batching: ragged lengths)
+            bidx = jnp.arange(x.shape[0])
+            kc = cache.k.at[bidx, widx].set(k[:, 0].astype(cache.k.dtype))
+            vc = cache.v.at[bidx, widx].set(v[:, 0].astype(cache.v.dtype))
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), widx, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), widx, axis=1)
+        new_cache = KVCache(kc, vc)
+        if x.shape[1] == 1:  # decode step
+            out = decode_attention(q, new_cache, cache_index + 1,
+                                   window=window, ring=ring)
+            return (out.reshape(*x.shape[:2], -1) @ p["wo"]), new_cache
+        k, v = kc, vc  # prefill: attend over the filled prefix (masked by causal)
+
+    out = flash_attention(q, k, v, causal=causal and not cross, window=window,
+                          q_offset=0, chunk_q=cfg.attn_chunk_q,
+                          chunk_kv=cfg.attn_chunk_kv)
+    return (out.reshape(*x.shape[:2], -1) @ p["wo"]), new_cache
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,107 @@
+"""Shared layers: norms, projections, RoPE, SwiGLU. Pure JAX, pytree params."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, Dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, f, dtype),
+            "w_up": dense_init(k2, d, f, dtype),
+            "w_down": dense_init(k3, f, d, dtype)}
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, f, dtype),
+            "w_out": dense_init(k2, f, d, dtype)}
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w_in"], approximate=True) @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, *, tied: bool) -> jax.Array:
+    w = table_or_head.T if tied else table_or_head
+    # logits in f32 for stable loss
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                      w.astype(jnp.float32))

@@ -1,0 +1,366 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan has no TPU analogue,
+so both Mamba2 and mLSTM run through one shared **chunked gated-linear-
+attention core** — the SSD block-decomposition of Dao & Gu: intra-chunk
+work is dense (cq × cq) matmuls on the MXU, inter-chunk state is a short
+``lax.scan`` over T/chunk steps carrying the (N × P) matrix state. Decode
+is the O(1) recurrent step on the same state.
+
+mLSTM rides the same core with sigmoid forget/input gates and a learned
+normalizer row (the ones-column trick appends the normalizer to the value
+matrix so one scan carries both). sLSTM has true hidden-state feedback in
+its gates, which is inherently sequential: it runs as a ``lax.scan`` over
+time (documented; it is 1/8 of xLSTM's layers).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# shared chunked core:  h_t = a_t h_{t-1} + k_t v_t^T ;  y_t = h_t^T q_t
+#   q,k: (B,T,H,N)  v: (B,T,H,P)  a: (B,T,H) in (0,1]
+# ---------------------------------------------------------------------------
+
+
+class GLAState(NamedTuple):
+    s: jax.Array    # (B, H, N, P) matrix state
+
+
+def gla_chunked(q: jax.Array, k: jax.Array, v: jax.Array, a: jax.Array,
+                chunk: int, init_state: Optional[GLAState] = None
+                ) -> Tuple[jax.Array, GLAState]:
+    b, t, h, n = q.shape
+    p = v.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    nc = t // c
+
+    qc = jnp.moveaxis(q.reshape(b, nc, c, h, n), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nc, c, h, n), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, c, h, p), 1, 0)
+    la = jnp.log(jnp.maximum(a, 1e-20)).astype(jnp.float32)
+    lac = jnp.moveaxis(la.reshape(b, nc, c, h), 1, 0)
+
+    s0 = (init_state.s if init_state is not None
+          else jnp.zeros((b, h, n, p), jnp.float32))
+
+    def step(s, inp):
+        q_i, k_i, v_i, la_i = inp                     # (B,c,H,·)
+        cum = jnp.cumsum(la_i, axis=1)                # (B,c,H) log decay from start
+        # intra-chunk: M[i,j] = exp(cum_i - cum_j) for i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # (B,c,c,H)
+        iota = jnp.arange(c)
+        mask = iota[:, None] >= iota[None, :]
+        m = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        att = jnp.einsum("bihn,bjhn->bijh", q_i.astype(jnp.float32),
+                         k_i.astype(jnp.float32)) * m
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, v_i.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        dec_q = jnp.exp(cum)                                     # (B,c,H)
+        y_inter = jnp.einsum("bihn,bhnp->bihp", q_i.astype(jnp.float32), s) \
+            * dec_q[..., None]
+        # new carried state
+        dec_k = jnp.exp(cum[:, -1:, :] - cum)                    # decay j -> end
+        s_local = jnp.einsum("bjhn,bjhp->bhnp",
+                             (k_i.astype(jnp.float32) * dec_k[..., None]),
+                             v_i.astype(jnp.float32))
+        s_new = s * jnp.exp(cum[:, -1, :])[:, :, None, None] + s_local
+        return s_new, (y_intra + y_inter)
+
+    s_fin, ys = jax.lax.scan(step, s0, (qc, kc, vc, lac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, p)
+    return y.astype(v.dtype), GLAState(s_fin)
+
+
+def gla_step(q, k, v, a, state: GLAState) -> Tuple[jax.Array, GLAState]:
+    """Single-token recurrent step. q,k: (B,1,H,N); v: (B,1,H,P); a: (B,1,H)."""
+    s = state.s * a[:, 0, :, None, None].astype(jnp.float32)
+    s = s + jnp.einsum("bhn,bhp->bhnp", k[:, 0].astype(jnp.float32),
+                       v[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q[:, 0].astype(jnp.float32), s)
+    return y[:, None].astype(v.dtype), GLAState(s)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (kernel 4), with decode state
+# ---------------------------------------------------------------------------
+
+CONV_K = 4
+
+
+def conv_init(key, channels: int, dtype) -> Params:
+    w = jax.random.normal(key, (CONV_K, channels), jnp.float32) / math.sqrt(CONV_K)
+    return {"w": w.astype(dtype)}
+
+
+def conv_apply(p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, T, C) causal depthwise conv along T."""
+    w = p["w"].astype(jnp.float32)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(CONV_K))
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def conv_step(p: Params, x1: jax.Array, state: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x1: (B, 1, C); state: (B, K-1, C) previous inputs."""
+    w = p["w"].astype(jnp.float32)
+    window = jnp.concatenate([state, x1], axis=1).astype(jnp.float32)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w)[:, None]
+    return jax.nn.silu(out).astype(x1.dtype), window[:, 1:].astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+class Mamba2Cache(NamedTuple):
+    conv: jax.Array   # (B, K-1, conv_channels)
+    ssd: jax.Array    # (B, H, N, P)
+
+
+def mamba2_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n           # x, B, C go through the conv
+    return d_inner, heads, n, conv_ch
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, heads, n, conv_ch = mamba2_dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * n + heads, dtype),
+        "conv": conv_init(ks[1], conv_ch, dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32) + jnp.log(jnp.e),  # A≈-e
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "w_out": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _mamba2_split(p: Params, x: jax.Array, cfg: ArchConfig):
+    d_inner, heads, n, conv_ch = mamba2_dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+    return z, xbc, dt, (d_inner, heads, n)
+
+
+def _mamba2_core(p, z, xbc, dt, dims, cfg, b, t):
+    d_inner, heads, n = dims
+    xv, bb, cc = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,T,H)
+    a = jnp.exp(-jnp.exp(p["a_log"]) * dt)                             # decay
+    v = xv.reshape(b, t, heads, cfg.ssm_head_dim)
+    v_in = v * dt[..., None].astype(v.dtype)
+    q = jnp.repeat(cc[:, :, None, :], heads, axis=2)                   # C
+    k = jnp.repeat(bb[:, :, None, :], heads, axis=2)                   # B
+    return q, k, v, v_in, a
+
+
+def mamba2_apply(p: Params, x: jax.Array, cfg: ArchConfig,
+                 cache: Optional[Mamba2Cache] = None
+                 ) -> Tuple[jax.Array, Optional[Mamba2Cache]]:
+    b, t, _ = x.shape
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    z, xbc, dt, dims = _mamba2_split(p, xn, cfg)
+    if cache is not None and t == 1:           # decode: O(1) recurrent step
+        xbc1, conv_state = conv_step(p["conv"], xbc, cache.conv)
+        q, k, v, v_in, a = _mamba2_core(p, z, xbc1, dt, dims, cfg, b, t)
+        y, st = gla_step(q, k, v_in, a, GLAState(cache.ssd))
+        new_cache = Mamba2Cache(conv=conv_state, ssd=st.s)
+    else:                                       # train / prefill: chunked SSD
+        xbc_raw = xbc
+        xbc = conv_apply(p["conv"], xbc)
+        q, k, v, v_in, a = _mamba2_core(p, z, xbc, dt, dims, cfg, b, t)
+        init = GLAState(cache.ssd) if cache is not None else None
+        y, st = gla_chunked(q, k, v_in, a, cfg.ssm_chunk, init_state=init)
+        new_cache = None
+        if cache is not None:
+            tail = jnp.concatenate([cache.conv.astype(xbc_raw.dtype), xbc_raw],
+                                   axis=1)[:, -(CONV_K - 1):]
+            new_cache = Mamba2Cache(conv=tail.astype(cache.conv.dtype), ssd=st.s)
+    y = y + v * p["d_skip"][None, None, :, None].astype(v.dtype)
+    y = y.reshape(b, t, dims[0])
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return (y @ p["w_out"]).astype(x.dtype), new_cache
+
+
+def mamba2_cache_init(cfg: ArchConfig, batch: int, dtype) -> Mamba2Cache:
+    d_inner, heads, n, conv_ch = mamba2_dims(cfg)
+    return Mamba2Cache(
+        conv=jnp.zeros((batch, CONV_K - 1, conv_ch), dtype),
+        ssd=jnp.zeros((batch, heads, n, cfg.ssm_head_dim), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — matrix memory via the shared core + normalizer row
+# ---------------------------------------------------------------------------
+
+
+class MLSTMCache(NamedTuple):
+    s: jax.Array    # (B, H, N, P+1) state with normalizer column
+
+
+def mlstm_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.n_heads
+    p = d_inner // heads          # value head dim
+    n = max(cfg.hd, 16)           # q/k head dim
+    return d_inner, heads, n, p
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, heads, n, pdim = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_up": dense_init(ks[0], d, 2 * d_inner, dtype),
+        "w_q": dense_init(ks[1], d_inner, heads * n, dtype),
+        "w_k": dense_init(ks[2], d_inner, heads * n, dtype),
+        "w_if": dense_init(ks[3], d_inner, 2 * heads, dtype),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "w_down": dense_init(ks[4], d_inner, d, dtype),
+    }
+
+
+def _mlstm_qkv(p, xi, cfg, b, t):
+    d_inner, heads, n, pdim = mlstm_dims(cfg)
+    q = (xi @ p["w_q"]).reshape(b, t, heads, n) / math.sqrt(n)
+    k = (xi @ p["w_k"]).reshape(b, t, heads, n) / math.sqrt(n)
+    v = xi.reshape(b, t, heads, pdim)
+    gates = (xi @ p["w_if"]).astype(jnp.float32).reshape(b, t, heads, 2)
+    i_g = jax.nn.sigmoid(gates[..., 0])
+    f_g = jax.nn.sigmoid(gates[..., 1] + 2.0)   # bias toward remember
+    ones = jnp.ones((b, t, heads, 1), v.dtype)
+    v_aug = jnp.concatenate([v * i_g[..., None].astype(v.dtype), ones *
+                             i_g[..., None].astype(v.dtype)], axis=-1)
+    return q, k, v_aug, f_g, (d_inner, heads, n, pdim)
+
+
+def _mlstm_out(y_aug, z, p, cfg, b, t, dims):
+    d_inner, heads, n, pdim = dims
+    y, norm = y_aug[..., :pdim], y_aug[..., pdim:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    y = y.reshape(b, t, d_inner)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_down"]
+
+
+def mlstm_apply(p: Params, x: jax.Array, cfg: ArchConfig,
+                cache: Optional[MLSTMCache] = None
+                ) -> Tuple[jax.Array, Optional[MLSTMCache]]:
+    b, t, _ = x.shape
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v_aug, f_g, dims = _mlstm_qkv(p, xi, cfg, b, t)
+    if cache is not None and t == 1:           # decode
+        y_aug, st = gla_step(q, k, v_aug, f_g, GLAState(cache.s))
+        new_cache = MLSTMCache(st.s)
+    else:                                       # train / prefill
+        init = GLAState(cache.s) if cache is not None else None
+        y_aug, st = gla_chunked(q, k, v_aug, f_g, cfg.ssm_chunk, init_state=init)
+        new_cache = MLSTMCache(st.s) if cache is not None else None
+    return _mlstm_out(y_aug, z, p, cfg, b, t, dims).astype(x.dtype), new_cache
+
+
+def mlstm_cache_init(cfg: ArchConfig, batch: int) -> MLSTMCache:
+    d_inner, heads, n, pdim = mlstm_dims(cfg)
+    return MLSTMCache(jnp.zeros((batch, heads, n, pdim + 1), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block — sequential scan (hidden-state feedback in the gates)
+# ---------------------------------------------------------------------------
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array   # (B, d_inner)
+    n: jax.Array   # (B, d_inner)
+    h: jax.Array   # (B, d_inner)
+
+
+def slstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.n_heads
+    dh = d_inner // heads
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "w_in": dense_init(ks[0], d, 4 * d_inner, dtype),     # z,i,f,o pre-acts
+        "r": (jax.random.normal(ks[1], (heads, dh, 4 * dh), jnp.float32)
+              / math.sqrt(dh)).astype(dtype),                 # recurrent, per head
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "w_out": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _slstm_cell(p, cfg, pre, state: SLSTMCache):
+    """pre: (B, 4*d_inner) input pre-activations for one step."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.n_heads
+    dh = d_inner // heads
+    b = pre.shape[0]
+    hh = state.h.reshape(b, heads, dh)
+    rec = jnp.einsum("bhd,hdg->bhg", hh.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(b, 4 * d_inner)
+    zifo = pre.astype(jnp.float32) + rec
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jnp.exp(jnp.minimum(i, 10.0))
+    f = jax.nn.sigmoid(f + 2.0)
+    o = jax.nn.sigmoid(o)
+    c = f * state.c + i * z
+    n = f * state.n + i
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return h, SLSTMCache(c=c, n=n, h=h)
+
+
+def slstm_apply(p: Params, x: jax.Array, cfg: ArchConfig,
+                cache: Optional[SLSTMCache] = None
+                ) -> Tuple[jax.Array, Optional[SLSTMCache]]:
+    b, t, _ = x.shape
+    d_inner = cfg.ssm_expand * cfg.d_model
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    pre = xn @ p["w_in"]                                   # (B,T,4*d_inner)
+    state = cache if cache is not None else SLSTMCache(
+        c=jnp.zeros((b, d_inner), jnp.float32),
+        n=jnp.zeros((b, d_inner), jnp.float32),
+        h=jnp.zeros((b, d_inner), jnp.float32))
+
+    if t == 1:
+        h, new_state = _slstm_cell(p, cfg, pre[:, 0], state)
+        hs = h[:, None]
+    else:
+        def step(st, pre_t):
+            h, st2 = _slstm_cell(p, cfg, pre_t, st)
+            return st2, h
+        new_state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)                        # (B,T,d_inner)
+    y = rmsnorm(p["out_norm"], hs.astype(x.dtype), cfg.norm_eps)
+    out = y @ p["w_out"]
+    return out.astype(x.dtype), (new_state if cache is not None else None)
+
+
+def slstm_cache_init(cfg: ArchConfig, batch: int) -> SLSTMCache:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    z = jnp.zeros((batch, d_inner), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z)

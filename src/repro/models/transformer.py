@@ -1,0 +1,504 @@
+"""LM assembly for all ten architectures — one scan-based code path.
+
+Depth is organized as *super-blocks* so heterogeneous stacks stay inside a
+single ``jax.lax.scan`` with stacked params (compile time O(1) in depth):
+
+  dense/moe     : n_layers super-blocks of 1 layer (attn + MLP/MoE)
+  vlm           : 1 cross-attn layer + (every-1) self layers per super-block
+  hybrid/zamba2 : 1 *shared* attention block (params hoisted out of the
+                  scan, per-application KV caches scanned) + every Mamba2
+  ssm/xlstm     : (every-1) mLSTM + 1 sLSTM per super-block
+  audio/whisper : encoder scan (bidirectional) + decoder scan
+                  (self-attn + cross-attn + MLP)
+
+Each super-block body is wrapped in ``jax.checkpoint`` with the config's
+remat policy. Caches are stacked pytrees scanned alongside params, so
+prefill/decode run the same structure.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm
+from .attention import KVCache, attn_apply, attn_init, init_kv_cache
+from .config import ArchConfig
+from .layers import (Params, dense_init, dtype_of, embed, embed_init, mlp,
+                     mlp_init, rmsnorm, rmsnorm_init, unembed)
+from .moe import moe_apply, moe_init
+
+REMAT_POLICIES = {
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+    "dots_with_no_batch_dims_saveable":
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything_saveable": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def _stacked_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# super-block geometry
+# ---------------------------------------------------------------------------
+
+
+def superblock_plan(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_super, layers_per_super) for the main stack."""
+    if cfg.family == "vlm":
+        assert cfg.n_layers % cfg.cross_attn_every == 0
+        return cfg.n_layers // cfg.cross_attn_every, cfg.cross_attn_every
+    if cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.shared_attn_every == 0
+        return cfg.n_layers // cfg.shared_attn_every, cfg.shared_attn_every
+    if cfg.family == "ssm" and cfg.xlstm_slstm_every:
+        assert cfg.n_layers % cfg.xlstm_slstm_every == 0
+        return cfg.n_layers // cfg.xlstm_slstm_every, cfg.xlstm_slstm_every
+    return cfg.n_layers, 1
+
+
+# ---------------------------------------------------------------------------
+# per-family layer init
+# ---------------------------------------------------------------------------
+
+
+def _attn_mlp_layer_init(key, cfg: ArchConfig, dtype, use_moe: bool,
+                         cross: bool = False, kv_d: Optional[int] = None) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model, dtype),
+                 "attn": attn_init(k1, cfg, dtype, kv_d_model=kv_d),
+                 "ln2": rmsnorm_init(cfg.d_model, dtype)}
+    if use_moe:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, dtype)
+    if cross:
+        p["ln_cross"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attn_init(k4, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+
+    n_super, per = superblock_plan(cfg)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        params["blocks"] = _stacked_init(
+            lambda k: _attn_mlp_layer_init(k, cfg, dtype, use_moe=fam == "moe"),
+            keys[2], n_super)
+    elif fam == "vlm":
+        params["cross_blocks"] = _stacked_init(
+            lambda k: _attn_mlp_layer_init(k, cfg, dtype, use_moe=False, cross=True),
+            keys[2], n_super)
+        params["blocks"] = _stacked_init(
+            lambda k: _stacked_init(
+                lambda k2: _attn_mlp_layer_init(k2, cfg, dtype, use_moe=False),
+                k, per - 1),
+            keys[3], n_super)
+    elif fam == "hybrid":
+        params["shared_attn"] = _attn_mlp_layer_init(keys[2], cfg, dtype,
+                                                     use_moe=False)
+        params["blocks"] = _stacked_init(
+            lambda k: _stacked_init(lambda k2: ssm.mamba2_init(k2, cfg, dtype),
+                                    k, per),
+            keys[3], n_super)
+    elif fam == "ssm":
+        if cfg.xlstm_slstm_every:
+            params["blocks"] = _stacked_init(
+                lambda k: _stacked_init(lambda k2: ssm.mlstm_init(k2, cfg, dtype),
+                                        k, per - 1),
+                keys[2], n_super)
+            params["slstm_blocks"] = _stacked_init(
+                lambda k: ssm.slstm_init(k, cfg, dtype), keys[3], n_super)
+        else:
+            params["blocks"] = _stacked_init(
+                lambda k: ssm.mlstm_init(k, cfg, dtype), keys[2], n_super)
+    elif fam == "audio":
+        params["enc_blocks"] = _stacked_init(
+            lambda k: _attn_mlp_layer_init(k, cfg, dtype, use_moe=False),
+            keys[2], cfg.n_encoder_layers)
+        params["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        params["blocks"] = _stacked_init(
+            lambda k: _attn_mlp_layer_init(k, cfg, dtype, use_moe=False, cross=True),
+            keys[3], n_super)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_attn_mlp(pl: Params, x, cfg: ArchConfig, positions, *,
+                    use_moe: bool, causal=True, window=None,
+                    cache: Optional[KVCache] = None, cache_index=None,
+                    cross_kv=None):
+    h, new_cache = attn_apply(pl["attn"], rmsnorm(pl["ln1"], x, cfg.norm_eps),
+                              cfg, positions=positions, causal=causal,
+                              window=window, cache=cache,
+                              cache_index=cache_index)
+    x = x + h
+    if cross_kv is not None:
+        hc, _ = attn_apply(pl["cross"], rmsnorm(pl["ln_cross"], x, cfg.norm_eps),
+                           cfg, positions=positions, kv_x=cross_kv,
+                           causal=False, use_rope=False)
+        x = x + hc
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        h2, aux = moe_apply(pl["moe"], rmsnorm(pl["ln2"], x, cfg.norm_eps), cfg)
+    else:
+        h2 = mlp(pl["mlp"], rmsnorm(pl["ln2"], x, cfg.norm_eps))
+    return x + h2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                enc_len: int = 1) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.dtype)
+    n_super, per = superblock_plan(cfg)
+    fam = cfg.family
+
+    def stack(fn, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *([fn()] * n)) if n else None
+
+    caches: Dict[str, Any] = {"index": jnp.zeros((batch,), jnp.int32)}
+    if fam in ("dense", "moe"):
+        caches["blocks"] = stack(lambda: init_kv_cache(cfg, batch, max_len, dtype),
+                                 n_super)
+    elif fam == "vlm":
+        caches["cross_blocks"] = stack(
+            lambda: init_kv_cache(cfg, batch, max_len, dtype), n_super)
+        caches["blocks"] = stack(
+            lambda: stack(lambda: init_kv_cache(cfg, batch, max_len, dtype),
+                          per - 1), n_super)
+    elif fam == "hybrid":
+        caches["shared_attn"] = stack(
+            lambda: init_kv_cache(cfg, batch, max_len, dtype), n_super)
+        caches["blocks"] = stack(
+            lambda: stack(lambda: ssm.mamba2_cache_init(cfg, batch, dtype), per),
+            n_super)
+    elif fam == "ssm":
+        if cfg.xlstm_slstm_every:
+            caches["blocks"] = stack(
+                lambda: stack(lambda: ssm.mlstm_cache_init(cfg, batch), per - 1),
+                n_super)
+            caches["slstm_blocks"] = stack(lambda: ssm.slstm_cache_init(cfg, batch),
+                                           n_super)
+        else:
+            caches["blocks"] = stack(lambda: ssm.mlstm_cache_init(cfg, batch),
+                                     n_super)
+    elif fam == "audio":
+        caches["blocks"] = stack(lambda: init_kv_cache(cfg, batch, max_len, dtype),
+                                 n_super)
+        caches["enc_out"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# the stack runner
+# ---------------------------------------------------------------------------
+
+
+class StackOut(NamedTuple):
+    x: jax.Array
+    caches: Optional[Dict[str, Any]]
+    aux: jax.Array
+
+
+def _run_stack(params: Params, cfg: ArchConfig, x: jax.Array, positions, *,
+               caches: Optional[Dict[str, Any]], cache_index,
+               cross_kv: Optional[jax.Array]) -> StackOut:
+    fam = cfg.family
+    n_super, per = superblock_plan(cfg)
+    policy = REMAT_POLICIES[cfg.remat_policy]
+    use_cache = caches is not None
+    window = cfg.window
+
+    def super_body(carry, xs):
+        x, aux = carry
+        if fam in ("dense", "moe"):
+            pl, cache = xs
+            x, new_cache, a = _apply_attn_mlp(
+                pl, x, cfg, positions, use_moe=fam == "moe", window=window,
+                cache=cache, cache_index=cache_index)
+            aux += a
+            return (x, aux), new_cache
+        if fam == "vlm":
+            (pc, cc), (pb, cb) = xs
+            x, nc, _ = _apply_attn_mlp(pc, x, cfg, positions, use_moe=False,
+                                       window=None, cache=cc,
+                                       cache_index=cache_index,
+                                       cross_kv=cross_kv)
+            new_b = []
+            for j in range(per - 1):
+                plj = jax.tree.map(lambda v: v[j], pb)
+                cbj = jax.tree.map(lambda v: v[j], cb) if use_cache else None
+                x, ncj, _ = _apply_attn_mlp(plj, x, cfg, positions,
+                                            use_moe=False, cache=cbj,
+                                            cache_index=cache_index)
+                new_b.append(ncj)
+            new_b = (jax.tree.map(lambda *vs: jnp.stack(vs), *new_b)
+                     if use_cache else None)
+            return (x, aux), (nc, new_b)
+        if fam == "hybrid":
+            (shared_cache,), (pb, cb) = xs[0], xs[1]
+            x, nc, _ = _apply_attn_mlp(params["shared_attn"], x, cfg, positions,
+                                       use_moe=False, cache=shared_cache,
+                                       cache_index=cache_index)
+            new_b = []
+            for j in range(per):
+                plj = jax.tree.map(lambda v: v[j], pb)
+                cbj = jax.tree.map(lambda v: v[j], cb) if use_cache else None
+                x_delta, ncj = ssm.mamba2_apply(plj, x, cfg, cache=cbj)
+                x = x + x_delta
+                new_b.append(ncj)
+            new_b = (jax.tree.map(lambda *vs: jnp.stack(vs), *new_b)
+                     if use_cache else None)
+            return (x, aux), (nc, new_b)
+        if fam == "ssm":
+            if cfg.xlstm_slstm_every:
+                (pb, cb), (ps, cs) = xs
+                new_b = []
+                for j in range(per - 1):
+                    plj = jax.tree.map(lambda v: v[j], pb)
+                    cbj = jax.tree.map(lambda v: v[j], cb) if use_cache else None
+                    dx, ncj = ssm.mlstm_apply(plj, x, cfg, cache=cbj)
+                    x = x + dx
+                    new_b.append(ncj)
+                dx, ncs = ssm.slstm_apply(ps, x, cfg, cache=cs)
+                x = x + dx
+                new_b = (jax.tree.map(lambda *vs: jnp.stack(vs), *new_b)
+                         if use_cache else None)
+                return (x, aux), (new_b, ncs)
+            pl, cache = xs
+            dx, nc = ssm.mlstm_apply(pl, x, cfg, cache=cache)
+            return (x + dx, aux), nc
+        if fam == "audio":
+            pl, cache = xs
+            x, nc, _ = _apply_attn_mlp(pl, x, cfg, positions, use_moe=False,
+                                       cache=cache, cache_index=cache_index,
+                                       cross_kv=cross_kv)
+            return (x, aux), nc
+        raise ValueError(fam)
+
+    # assemble scan xs per family
+    def none_like(tree):  # cache placeholder when not serving
+        return None
+
+    if fam in ("dense", "moe", "audio"):
+        xs = (params["blocks"], caches["blocks"] if use_cache else None)
+    elif fam == "vlm":
+        xs = ((params["cross_blocks"],
+               caches["cross_blocks"] if use_cache else None),
+              (params["blocks"], caches["blocks"] if use_cache else None))
+    elif fam == "hybrid":
+        xs = ((caches["shared_attn"] if use_cache else None,),
+              (params["blocks"], caches["blocks"] if use_cache else None))
+    elif fam == "ssm" and cfg.xlstm_slstm_every:
+        xs = ((params["blocks"], caches["blocks"] if use_cache else None),
+              (params["slstm_blocks"],
+               caches["slstm_blocks"] if use_cache else None))
+    else:
+        xs = (params["blocks"], caches["blocks"] if use_cache else None)
+
+    body = jax.checkpoint(super_body, policy=policy, prevent_cse=False)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    out_caches = None
+    if use_cache:
+        out_caches = dict(caches)
+        if fam == "vlm":
+            out_caches["cross_blocks"], out_caches["blocks"] = new_caches
+        elif fam == "hybrid":
+            out_caches["shared_attn"], out_caches["blocks"] = new_caches
+        elif fam == "ssm" and cfg.xlstm_slstm_every:
+            out_caches["blocks"], out_caches["slstm_blocks"] = new_caches
+        else:
+            out_caches["blocks"] = new_caches
+    return StackOut(x=x, caches=out_caches, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _encode(params: Params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, D) stub frontend embeddings -> encoder states."""
+    x = frames
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    policy = REMAT_POLICIES[cfg.remat_policy]
+
+    def body(carry, pl):
+        x, = carry
+        x, _, _ = _apply_attn_mlp(pl, x, cfg, positions, use_moe=False,
+                                  causal=False)
+        return (x,), None
+
+    (x,), _ = jax.lax.scan(jax.checkpoint(body, policy=policy, prevent_cse=False),
+                           (x,), params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def _backbone(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+              image_embeds: Optional[jax.Array] = None,
+              encoder_frames: Optional[jax.Array] = None,
+              caches: Optional[Dict[str, Any]] = None,
+              cache_index: Optional[jax.Array] = None,
+              positions: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """tokens (B, T) -> (hidden (B, T, D) post final-norm, caches', aux)."""
+    x = embed(params["embed"], tokens)
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        if jnp.ndim(base) == 1:     # per-slot decode positions
+            positions = base[:, None] + jnp.arange(tokens.shape[1])[None, :]
+        else:
+            positions = base + jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                                tokens.shape)
+    cross_kv = None
+    if cfg.family == "vlm":
+        assert image_embeds is not None, "vlm needs image_embeds (stub frontend)"
+        cross_kv = image_embeds
+    if cfg.family == "audio":
+        if caches is not None and encoder_frames is None:
+            cross_kv = caches["enc_out"]
+        else:
+            assert encoder_frames is not None, "audio needs encoder_frames (stub)"
+            cross_kv = _encode(params, cfg, encoder_frames)
+            if caches is not None:
+                caches = dict(caches)
+                caches["enc_out"] = cross_kv
+
+    out = _run_stack(params, cfg, x, positions, caches=caches,
+                     cache_index=cache_index, cross_kv=cross_kv)
+    h = rmsnorm(params["final_norm"], out.x, cfg.norm_eps)
+    new_caches = out.caches
+    if new_caches is not None and cache_index is not None:
+        new_caches = dict(new_caches)
+        nxt = cache_index + tokens.shape[1]
+        if jnp.ndim(nxt) == 0:
+            nxt = jnp.full((tokens.shape[0],), nxt, jnp.int32)
+        new_caches["index"] = nxt
+    return h, new_caches, out.aux
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jax.Array, *,
+            last_logits_only: bool = False, **kw
+            ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """tokens (B, T) -> (logits, caches', aux_loss)."""
+    h, new_caches, aux = _backbone(params, cfg, tokens, **kw)
+    if last_logits_only:
+        h = h[:, -1:]
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, h, tied=cfg.tie_embeddings)
+    return logits, new_caches, aux
+
+
+CE_CHUNK = 1024
+
+
+def _chunked_ce(h: jax.Array, table: jax.Array, tied: bool,
+                labels: jax.Array) -> jax.Array:
+    """Cross-entropy without materializing (B, T, V) logits.
+
+    The final projection dominates activation memory at large vocab
+    (151k vocab × 4k seq would be GBs of f32 per device); scanning
+    CE over sequence chunks keeps one (B, chunk, V) tile alive and the
+    chunk body under jax.checkpoint recomputes it in the backward pass.
+    """
+    b, t, d = h.shape
+    c = min(CE_CHUNK, t)
+    if t % c:
+        pad = c - t % c
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        t = t + pad
+    nc = t // c
+    hs = jnp.moveaxis(h.reshape(b, nc, c, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+
+    def body(carry, inp):
+        h_c, l_c = inp
+        logits = unembed(table, h_c, tied=tied)          # (B, c, V) f32
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, jnp.maximum(l_c, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (l_c >= 0).astype(jnp.float32)
+        return (carry[0] + jnp.sum(nll * mask), carry[1] + jnp.sum(mask)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, _, aux = _backbone(params, cfg, batch["tokens"],
+                          image_embeds=batch.get("image_embeds"),
+                          encoder_frames=batch.get("encoder_frames"))
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    loss = _chunked_ce(h, table, cfg.tie_embeddings, batch["labels"])
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def prefill(params, cfg, tokens, caches, *, last_logits_only: bool = False, **kw):
+    return forward(params, cfg, tokens, caches=caches,
+                   cache_index=jnp.zeros((), jnp.int32),
+                   last_logits_only=last_logits_only, **kw)
+
+
+def decode_step(params, cfg, token, caches, **kw):
+    """token: (B, 1); caches carry their own index."""
+    return forward(params, cfg, token, caches=caches,
+                   cache_index=caches["index"], **kw)
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params: Params, cfg: ArchConfig) -> int:
+    """MoE: only top_k/n_experts of expert params are active per token."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if cfg.n_experts and ("w_gate" in keys or "w_up" in keys or
+                              "w_down" in keys) and "moe" in keys:
+            total += leaf.size * cfg.top_k // cfg.n_experts
+        else:
+            total += leaf.size
+    return total

@@ -1,0 +1,163 @@
+"""Distributed checkpointing on the Delta Tensor store.
+
+Every train-state leaf is stored as FTSF chunk rows in one delta table;
+a checkpoint step is ONE atomic commit (two-phase: upload all part files,
+then commit), so a crash mid-write leaves the previous checkpoint intact —
+the delta log's put-if-absent commit is the recovery line.
+
+Features aimed at the 1000-node posture:
+* **incremental**: per-leaf content hashes; unchanged leaves are not
+  re-uploaded, the manifest re-points to the prior version's chunks (the
+  frozen-backbone / adapter-training case, and optimizer count scalars);
+* **elastic restore**: ``restore(..., shard_spec)`` issues slice reads for
+  exactly the rows covering this host's shard under a *new* mesh shape —
+  the paper's read-slice path doing resharded restarts;
+* **async**: ``save_async`` snapshots to host memory and uploads on a
+  background thread, overlapping the next train steps; ``wait()`` joins.
+* **time travel / retention**: every checkpoint is a table version;
+  ``restore(step=...)`` replays the manifest for that step.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core.encodings.base import normalize_slices
+from ..core.store import DeltaTensorStore
+from ..lake import ObjectStore
+
+
+def _path_str(path) -> str:
+    def part(k):
+        for attr in ("key", "name", "idx"):
+            if hasattr(k, attr):
+                return str(getattr(k, attr))
+        return str(k)
+    return "/".join(part(k) for k in path)
+
+
+def _leaf_hash(x: np.ndarray) -> str:
+    h = hashlib.blake2b(digest_size=12)
+    h.update(str(x.dtype).encode())
+    h.update(str(x.shape).encode())
+    h.update(np.ascontiguousarray(x).tobytes())
+    return h.hexdigest()
+
+
+class DeltaCheckpointer:
+    def __init__(self, object_store: ObjectStore, root: str = "checkpoints", *,
+                 chunk_dims: Optional[int] = None):
+        self.store = DeltaTensorStore(object_store, root)
+        self.chunk_dims = chunk_dims
+        self._last_hashes: Dict[str, Tuple[str, str]] = {}  # leaf -> (hash, tid)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+
+    def _upload(self, step: int, leaves: List[Tuple[str, np.ndarray]]) -> None:
+        adds, manifest = [], {}
+        for name, arr in leaves:
+            digest = _leaf_hash(arr)
+            prev = self._last_hashes.get(name)
+            if prev is not None and prev[0] == digest:
+                manifest[name] = prev[1]           # unchanged: reuse chunks
+                continue
+            tid = f"{name}@{step}"
+            # two-phase: upload invisible files now, commit once at the end
+            groups = self.store.put_deferred(arr, tensor_id=tid, layout="ftsf",
+                                             chunk_dims=self.chunk_dims)
+            adds.extend(groups)
+            manifest[name] = tid
+            self._last_hashes[name] = (digest, tid)
+        manifest_blob = json.dumps(manifest, sort_keys=True).encode()
+        adds.append(self.store.table.append(
+            {"step": np.asarray([step], np.int64),
+             "manifest": [manifest_blob]},
+            commit=False,
+            partition_values={"kind": "ckpt_manifest"}))
+        self.store.table.commit_adds(adds, op=f"CHECKPOINT step={step}")
+
+    def save(self, step: int, state: Any) -> None:
+        leaves = [( _path_str(p), np.asarray(x))
+                  for p, x in jax.tree_util.tree_flatten_with_path(state)[0]]
+        self._upload(step, leaves)
+
+    def save_async(self, step: int, state: Any) -> None:
+        self.wait()
+        # snapshot to host memory synchronously (device buffers may be donated)
+        leaves = [(_path_str(p), np.asarray(x))
+                  for p, x in jax.tree_util.tree_flatten_with_path(state)[0]]
+
+        def run():
+            try:
+                self._upload(step, leaves)
+            except BaseException as e:  # surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore --------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        out = []
+        for batch in self.store.table.scan(
+                partition_filters={"kind": "ckpt_manifest"}):
+            out.extend(int(s) for s in np.asarray(batch["step"]))
+        return sorted(set(out))
+
+    def _manifest(self, step: Optional[int]) -> Tuple[int, Dict[str, str]]:
+        best: Tuple[int, Dict[str, str]] = (-1, {})
+        for batch in self.store.table.scan(
+                partition_filters={"kind": "ckpt_manifest"}):
+            for s, blob in zip(np.asarray(batch["step"]), batch["manifest"]):
+                s = int(s)
+                if (step is None and s > best[0]) or (step is not None and s == step):
+                    best = (s, json.loads(bytes(blob)))
+        if best[0] < 0:
+            raise KeyError(f"no checkpoint found (requested step={step})")
+        return best
+
+    def restore(self, template: Any, *, step: Optional[int] = None,
+                shard_slices: Optional[Dict[str, Sequence]] = None) -> Tuple[int, Any]:
+        """template: pytree of arrays/ShapeDtypeStructs giving the structure.
+
+        shard_slices: optional {leaf_path: slice spec} — restore only this
+        host's shard via slice reads (elastic restore on a new mesh).
+        """
+        step_found, manifest = self._manifest(step)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in flat:
+            name = _path_str(path)
+            tid = manifest[name]
+            if shard_slices and name in shard_slices:
+                arr = self.store.get_slice(tid, shard_slices[name])
+            else:
+                arr = self.store.get(tid)
+            want = np.dtype(leaf.dtype)
+            out.append(arr.astype(want, copy=False))
+        return step_found, jax.tree_util.tree_unflatten(
+            treedef, out)
+
+    def restore_available(self) -> bool:
+        try:
+            self._manifest(None)
+            return True
+        except KeyError:
+            return False

@@ -1,0 +1,120 @@
+"""Cross-pod gradient compression — the paper's BSGS applied to the wire.
+
+The technique transplanted (DESIGN.md §2): BSGS keeps only the non-zero /
+high-energy blocks of a tensor plus their coordinates. Top-k block
+sparsification with error feedback (DGC/PowerSGD lineage) does exactly that
+to gradients before the *slow* cross-pod reduction:
+
+  e_p   = g_p + r_p                  (per-pod gradient + residual)
+  ids,B = block_topk(e_p, k)         (BSGS encode, kernels.block_topk)
+  r_p'  = e_p - decode(ids, B)       (error feedback)
+  g_hat = mean_p decode_p            (cross-pod sum of *compressed* payloads)
+
+Implementation is pure jit/GSPMD: per-pod values carry an explicit leading
+``pod`` dim sharded over the pod mesh axis; a sharding constraint forces
+the all-gather to happen on the **compressed** (ids, blocks) arrays, after
+which decode+sum is local. The HLO therefore shows cross-pod collective
+bytes equal to k·block_bytes — measurable by the roofline harness.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ref as kref
+
+DEFAULT_BLOCK = (8, 128)
+
+
+class CompressState(NamedTuple):
+    residual: Any          # pytree like grads, with leading pod dim
+
+
+def _as2d(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    if x.ndim == 0:
+        return x.reshape(1, 1), x.shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), x.shape
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+def _leaf_geometry(shape, block=DEFAULT_BLOCK):
+    rows = 1 if len(shape) <= 1 else int(math.prod(shape[:-1]))
+    cols = shape[-1] if shape else 1
+    bh = min(block[0], rows)
+    bw = min(block[1], cols)
+    gh = -(-rows // bh)
+    gw = -(-cols // bw)
+    return (rows, cols), (bh, bw), (gh * bh, gw * bw), gh * gw
+
+
+def _compress_leaf(e: jax.Array, ratio: float, block=DEFAULT_BLOCK):
+    """e: (pods, ...) -> vmapped (ids, blocks) + static geometry."""
+    x2_shape, bs, padded, n_blocks = _leaf_geometry(e.shape[1:], block)
+    k = max(1, int(n_blocks * ratio))
+
+    def one(ep):
+        x2 = ep.reshape(x2_shape)
+        x2 = jnp.pad(x2, ((0, padded[0] - x2_shape[0]),
+                          (0, padded[1] - x2_shape[1])))
+        return kref.block_topk(x2, bs, k)
+
+    ids, blocks = jax.vmap(one)(e)
+    return ids, blocks, padded, x2_shape, bs
+
+
+def compressed_grad_mean(grads_podwise: Any, residuals: Any, *,
+                         ratio: float = 0.05, block=DEFAULT_BLOCK,
+                         replicate_spec=None) -> Tuple[Any, Any, Dict[str, Any]]:
+    """grads_podwise: pytree, each leaf (n_pods, ...) sharded P('pod', ...).
+
+    Returns (mean_decoded_grads (no pod dim), new_residuals, stats).
+    replicate_spec: a NamedSharding that replicates — forces the all-gather
+    onto the compressed payload. None (single-device tests) skips it.
+    """
+    stats = {"sent_bytes": 0, "dense_bytes": 0}
+
+    def leaf(g, r):
+        e = g.astype(jnp.float32) + r
+        pods = e.shape[0]
+        ids, blocks, padded, x2_shape, bs = _compress_leaf(e, ratio, block)
+        # force the cross-pod exchange to happen on the compressed payload
+        ids_all = jax.lax.with_sharding_constraint(ids, replicate_spec) \
+            if replicate_spec is not None else ids
+        blocks_all = jax.lax.with_sharding_constraint(blocks, replicate_spec) \
+            if replicate_spec is not None else blocks
+
+        def decode(i, b):
+            z = jnp.zeros(padded, jnp.float32)
+            return kref.block_scatter(z, i, b)[:x2_shape[0], :x2_shape[1]]
+
+        decoded_own = jax.vmap(decode)(ids, blocks)          # (pods, rows, cols)
+        mean = jnp.mean(jax.vmap(decode)(ids_all, blocks_all), axis=0)
+        new_r = (e.reshape(pods, *x2_shape) - decoded_own).reshape(e.shape)
+        stats["sent_bytes"] += int(ids.size * 4 + blocks.size * 4)
+        stats["dense_bytes"] += int(e.size * 4)
+        return mean.reshape(g.shape[1:]), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads_podwise)
+    flat_r = treedef.flatten_up_to(residuals)
+    means, new_rs = [], []
+    for g, r in zip(flat_g, flat_r):
+        m, nr = leaf(g, r)
+        means.append(m)
+        new_rs.append(nr)
+    return (jax.tree.unflatten(treedef, means),
+            jax.tree.unflatten(treedef, new_rs), stats)
+
+
+def init_residuals(grads_podwise: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_podwise)
+
+
+def compression_ratio_bytes(stats: Dict[str, int]) -> float:
+    return stats["sent_bytes"] / max(stats["dense_bytes"], 1)

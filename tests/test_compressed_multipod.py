@@ -1,0 +1,75 @@
+"""Cross-pod gradient compression on the multi-pod mesh: HLO evidence.
+
+Lowers the compressed train step on a (2, data, model) mesh in a subprocess
+(needs >1 host devices) and checks that the cross-pod exchange happens on
+the compressed (ids, blocks) payload — i.e. total all-gather bytes are a
+small fraction of the dense gradient size.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models import get_arch
+from repro.train import optimizer as opt, trainer
+from repro.analysis import hlo_cost
+
+import dataclasses
+cfg = dataclasses.replace(get_arch("granite-3-8b").reduced(),
+                          d_model=256, d_ff=512, vocab_size=4096,
+                          n_layers=2, head_dim=64)
+ocfg = opt.OptConfig()
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+n_pods = 2
+
+state = jax.eval_shape(lambda: trainer.init_compressed_state(
+    cfg, jax.random.key(0), n_pods))
+batch = {
+    "tokens": jax.ShapeDtypeStruct((n_pods, 4, 32), jnp.int32),
+    "labels": jax.ShapeDtypeStruct((n_pods, 4, 32), jnp.int32),
+}
+pod_first = jax.tree.map(
+    lambda x: NamedSharding(
+        mesh, P("pod", *([None] * (len(x.shape) - 1))) if len(x.shape) else P()),
+    state)
+b_sh = {k: NamedSharding(mesh, P("pod", "data", None)) for k in batch}
+
+ratio = 0.05
+step = trainer.make_compressed_train_step(cfg, ocfg, ratio=ratio, mesh=mesh)
+with mesh:
+    compiled = jax.jit(step, in_shardings=(pod_first, b_sh)).lower(
+        state, batch).compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+
+n_params = sum(x.size for x in jax.tree.leaves(state.params)) // n_pods
+dense_bytes = n_params * 4
+print(json.dumps({
+    "dense_grad_bytes": dense_bytes,
+    "all_gather_bytes": cost.coll_bytes.get("all-gather", 0.0),
+    "total_coll_bytes": cost.total_coll_bytes,
+}))
+"""
+
+
+@pytest.mark.slow
+def test_compressed_step_exchanges_small_payload():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    # the pod-crossing all-gather moves (far) less than a dense f32 gradient
+    assert rec["all_gather_bytes"] < 0.6 * rec["dense_grad_bytes"], rec
+    assert rec["all_gather_bytes"] > 0, rec

@@ -1,0 +1,170 @@
+"""Roundtrip + slice correctness for all five paper codecs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SparseCOO, choose_layout, density, get_codec
+from repro.core.encodings.base import normalize_slices
+
+LAYOUTS = ["ftsf", "coo", "csr", "csc", "csf", "bsgs"]
+RNG = np.random.default_rng(42)
+
+
+def sparse_tensor(shape, density=0.05, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.zeros(shape, dtype=dtype)
+    n = max(1, int(np.prod(shape) * density))
+    flat = rng.choice(int(np.prod(shape)), size=n, replace=False)
+    x.reshape(-1)[flat] = rng.standard_normal(n).astype(dtype) + 1.0
+    return x
+
+
+def groups_as_dicts(groups):
+    return [g.columns for g in groups]
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("shape", [(7,), (5, 8), (4, 5, 6), (3, 4, 5, 2)])
+def test_roundtrip_dense_input(layout, shape):
+    x = sparse_tensor(shape, density=0.2, seed=hash(shape) % 2**31)
+    codec = get_codec(layout)
+    groups = groups_as_dicts(codec.encode(x))
+    np.testing.assert_array_equal(codec.decode(groups), x)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_roundtrip_empty_tensor(layout):
+    x = np.zeros((4, 5, 6), dtype=np.float64)
+    codec = get_codec(layout)
+    groups = groups_as_dicts(codec.encode(x))
+    np.testing.assert_array_equal(codec.decode(groups), x)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+def test_roundtrip_dtypes(layout, dtype):
+    x = sparse_tensor((6, 7, 8), density=0.1, dtype=dtype, seed=3)
+    codec = get_codec(layout)
+    groups = groups_as_dicts(codec.encode(x))
+    out = codec.decode(groups)
+    assert out.dtype == x.dtype
+    np.testing.assert_array_equal(out, x)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("sl", [
+    [(0, 2)],
+    [(1, 3)],
+    [(2, 3), (0, 4)],
+    [(0, 4), (1, 2), (3, 5)],
+])
+def test_decode_slice(layout, sl):
+    shape = (4, 5, 6, 3)
+    x = sparse_tensor(shape, density=0.15, seed=11)
+    codec = get_codec(layout)
+    groups = groups_as_dicts(codec.encode(x))
+    spec = normalize_slices(shape, sl)
+    expected = x[tuple(slice(lo, hi) for lo, hi in spec)]
+    np.testing.assert_array_equal(codec.decode_slice(groups, spec), expected)
+
+
+@pytest.mark.parametrize("layout", ["coo", "csr", "csf", "bsgs"])
+def test_coo_input_path(layout):
+    # sparse tensors arrive as COO (the paper's Uber dataset case)
+    shape = (10, 6, 7)
+    x = sparse_tensor(shape, density=0.03, seed=5)
+    t = SparseCOO.from_dense(x)
+    codec = get_codec(layout)
+    groups = groups_as_dicts(codec.encode(t))
+    np.testing.assert_array_equal(codec.decode(groups), x)
+    back = codec.decode_coo(groups)
+    np.testing.assert_array_equal(back.to_dense(), x)
+
+
+def test_csf_duplicate_coordinates_are_summed():
+    idx = np.array([[0, 1], [0, 1], [2, 3]])
+    vals = np.array([1.0, 2.0, 5.0], dtype=np.float32)
+    t = SparseCOO(idx, vals, (4, 4))
+    codec = get_codec("csf")
+    out = codec.decode(groups_as_dicts(codec.encode(t)))
+    assert out[0, 1] == 3.0 and out[2, 3] == 5.0
+
+
+def test_bsgs_block_shape_padding_and_custom_blocks():
+    x = sparse_tensor((5, 7), density=0.3, seed=9)  # not divisible by block
+    codec = get_codec("bsgs")
+    groups = groups_as_dicts(codec.encode(x, block_shape=(2, 3)))
+    np.testing.assert_array_equal(codec.decode(groups), x)
+    # paper-style short block shape: (1x2) on a 3-d tensor pads leading dims
+    y = sparse_tensor((3, 4, 2), density=0.4, seed=10)
+    groups = groups_as_dicts(codec.encode(y, block_shape=(1, 2)))
+    np.testing.assert_array_equal(codec.decode(groups), y)
+
+
+def test_ftsf_chunk_dims_variants():
+    x = RNG.standard_normal((4, 3, 8, 8)).astype(np.float32)
+    codec = get_codec("ftsf")
+    for cd in (0, 1, 2, 3, 4):
+        groups = groups_as_dicts(codec.encode(x, chunk_dims=cd))
+        np.testing.assert_array_equal(codec.decode(groups), x)
+
+
+def test_csr_split_variants():
+    x = sparse_tensor((4, 5, 6), density=0.1, seed=13)
+    codec = get_codec("csr")
+    for split in (1, 2):
+        groups = groups_as_dicts(codec.encode(x, split=split))
+        np.testing.assert_array_equal(codec.decode(groups), x)
+
+
+def test_sparsity_policy():
+    dense = np.ones((10, 10))
+    sparse = np.zeros((10, 10))
+    sparse[0, 0] = 1
+    assert density(dense) == 1.0
+    assert choose_layout(dense) == "ftsf"
+    assert choose_layout(sparse) == "bsgs"
+    assert choose_layout(sparse, prefer="csf") == "csf"
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def coo_tensors(draw):
+    ndim = draw(st.integers(1, 4))
+    shape = tuple(draw(st.integers(1, 6)) for _ in range(ndim))
+    total = int(np.prod(shape))
+    nnz = draw(st.integers(0, min(total, 20)))
+    flat = draw(st.lists(st.integers(0, total - 1), min_size=nnz, max_size=nnz,
+                         unique=True))
+    vals = draw(st.lists(st.floats(-100, 100, allow_nan=False, width=32).filter(lambda v: v != 0.0),
+                         min_size=nnz, max_size=nnz))
+    idx = np.stack(np.unravel_index(np.asarray(flat, dtype=np.int64), shape), axis=1) \
+        if nnz else np.zeros((0, ndim), np.int64)
+    return SparseCOO(idx, np.asarray(vals, dtype=np.float32), shape)
+
+
+@settings(max_examples=60, deadline=None)
+@given(t=coo_tensors(), layout=st.sampled_from(LAYOUTS))
+def test_property_roundtrip(t, layout):
+    codec = get_codec(layout)
+    groups = groups_as_dicts(codec.encode(t))
+    np.testing.assert_array_equal(codec.decode(groups), t.to_dense())
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=coo_tensors(), layout=st.sampled_from(LAYOUTS), data=st.data())
+def test_property_slice_equals_numpy(t, layout, data):
+    codec = get_codec(layout)
+    groups = groups_as_dicts(codec.encode(t))
+    spec = tuple(
+        (lambda lo, hi: (lo, hi))(lo, data.draw(st.integers(lo + 1, s), label=f"hi{d}"))
+        for d, s in enumerate(t.shape)
+        for lo in [data.draw(st.integers(0, s - 1), label=f"lo{d}")]
+    )
+    dense = t.to_dense()
+    expected = dense[tuple(slice(lo, hi) for lo, hi in spec)]
+    np.testing.assert_array_equal(codec.decode_slice(groups, spec), expected)
