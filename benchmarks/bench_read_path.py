@@ -1,0 +1,86 @@
+"""Read-path scaling: serial vs parallel vs cached tensor reads.
+
+The paper's testbed (1 Gbps, 10 ms RTT object store) is modeled by
+``LatencyModel``; this bench sweeps the read executor width and reports the
+modeled I/O makespan for multi-chunk ``get`` / ``get_slice``, plus the
+warm-block-cache repeat read. Expected shape of the result:
+
+* width 1 == the old serial read path (sum of per-file RTTs);
+* width >= 8 cuts modeled read time >= 2x on multi-chunk tensors (RTTs
+  overlap; payload bytes still share the one modeled link);
+* a warm cache turns repeat ``get`` of the same tensor into zero
+  object-store requests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DeltaTensorStore
+from repro.data.synthetic import ffhq_like
+from repro.lake import ReadExecutor
+
+from .common import fresh_store, row, timed
+
+SHAPE = (128, 3, 32, 32)
+TARGET_FILE_BYTES = 16 << 10     # force a few dozen chunk files
+
+
+def _loaded_store(width: int, cache_bytes: int = 0):
+    obj, lm = fresh_store(parallelism=width)
+    io = ReadExecutor(max_workers=width, cache_bytes=cache_bytes)
+    store = DeltaTensorStore(obj, "tensors", io=io)
+    x = ffhq_like(SHAPE)
+    store.put(x, layout="ftsf", tensor_id="x", chunk_dims=3,
+              target_file_bytes=TARGET_FILE_BYTES)
+    return store, lm, x
+
+
+def run(widths=(1, 8, 16), repeats=None):
+    repeats = repeats or 1
+    lines = []
+    # half the leading dim: a multi-file slice (the paper's X[0:100] analog
+    # spans one file; parallel fetch pays off once a slice covers several)
+    sl_hi = max(1, SHAPE[0] // 2)
+    elapsed_by_width = {}
+
+    for width in widths:
+        store, lm, _ = _loaded_store(width, cache_bytes=0)
+        n_files = len([a for a in store.table.files()
+                       if a["partitionValues"].get("kind") == "chunk"])
+        r = timed(lm, lambda: store.get("x"), repeats)
+        s = timed(lm, lambda: store.get_slice("x", [(0, sl_hi)]), repeats)
+        elapsed_by_width[width] = (r.io_s, s.io_s)
+        lines.append(row(f"read_path_get_w{width}", r.io_s * 1e6,
+                         f"n_chunk_files={n_files} bytes={r.bytes_moved}"))
+        lines.append(row(f"read_path_slice_w{width}", s.io_s * 1e6,
+                         f"bytes={s.bytes_moved}"))
+
+    # warm block cache: repeat get of the same tensor -> zero requests
+    # (version-pinned, as a serving reader would: snapshot + blocks cached)
+    store, lm, x = _loaded_store(8, cache_bytes=256 << 20)
+    v = store.version()
+    store.get("x", version=v)            # cold read fills the cache
+    lm.reset()
+    np.testing.assert_array_equal(store.get("x", version=v), x)
+    lines.append(row("read_path_get_cached", lm.elapsed_s * 1e6,
+                     f"requests={lm.requests} bytes={lm.bytes_moved} "
+                     f"hits={store.io.stats.cache_hits}"))
+    lm.reset()
+    np.testing.assert_array_equal(store.get("x"), x)   # unpinned warm read
+    lines.append(row("read_path_get_cached_unpinned", lm.elapsed_s * 1e6,
+                     f"requests={lm.requests} bytes={lm.bytes_moved}"))
+
+    if 1 in elapsed_by_width:
+        base_get, base_sl = elapsed_by_width[1]
+        for w, (g, s) in sorted(elapsed_by_width.items()):
+            if w == 1:
+                continue
+            lines.append(row(f"read_path_speedup_w{w}", 0.0,
+                             f"get={base_get / g:.2f}x slice={base_sl / s:.2f}x"))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -24,10 +24,13 @@ class OpCost:
         return self.cpu_s + self.io_s
 
 
-def fresh_store():
+def fresh_store(parallelism: int = 1):
+    """Modeled object store; ``parallelism`` = concurrent channel width
+    (the LatencyModel reports makespan instead of serial sum when > 1)."""
     lm = LatencyModel(rtt_s=PAPER_STORE["object_store"]["rtt_s"],
                       bandwidth_bps=PAPER_STORE["object_store"]["bandwidth_bps"],
-                      virtual_clock=True)
+                      virtual_clock=True, parallelism=parallelism,
+                      occupancy_scale=0.05 if parallelism > 1 else 0.0)
     return InMemoryObjectStore(latency=lm), lm
 
 

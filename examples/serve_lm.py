@@ -4,6 +4,10 @@
 
 Requests with ragged prompt lengths stream through a fixed pool of slots;
 a finished sequence's slot is immediately re-admitted from the queue.
+
+With ``--from-store`` the weights round-trip through the Delta Tensor
+store first: saved as one FTSF tensor per param leaf, then cold-start
+loaded with every leaf fetched in parallel on the shared ReadExecutor.
 """
 
 import argparse
@@ -13,7 +17,7 @@ import jax
 import numpy as np
 
 from repro.models import get_arch, transformer
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, load_weights, save_weights
 
 
 def main():
@@ -22,12 +26,27 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--from-store", action="store_true",
+                    help="round-trip weights through the Delta Tensor store "
+                         "(parallel cold-start weight load)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     if not cfg.supports_decode:
         raise SystemExit(f"{args.arch} has no decode step")
     params = transformer.init_params(cfg, jax.random.key(0))
+
+    if args.from_store:
+        from repro.core import DeltaTensorStore
+        from repro.lake import InMemoryObjectStore, ReadExecutor
+        store = DeltaTensorStore(InMemoryObjectStore(), "weights",
+                                 io=ReadExecutor(max_workers=8))
+        save_weights(store, params, prefix=cfg.name)
+        t0 = time.time()
+        params = load_weights(store, params, prefix=cfg.name)
+        st = store.io.stats
+        print(f"weights loaded from delta store in {time.time() - t0:.2f}s "
+              f"(gets={st.gets} cache_hits={st.cache_hits})")
 
     extra = {}
     if cfg.family == "vlm":

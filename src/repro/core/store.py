@@ -6,6 +6,10 @@ groups as parq-lite files in a single atomic commit, partitioned by
 read-slice operations: slice reads fetch the 1-row header, derive pushdown
 filters from the codec, and touch only the chunk files whose min/max stats
 overlap the slice. ``version=`` arguments give Delta time travel.
+
+All chunk fetches flow through the table's shared ``ReadExecutor``
+(``repro.lake.io``): surviving chunk files are fetched concurrently, decode
+streams in plan order as gets complete, repeat reads hit the block cache.
 """
 
 from __future__ import annotations
@@ -15,7 +19,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..lake import DeltaTable, ObjectStore
+from ..lake import DeltaTable, ObjectStore, ReadExecutor
 from .encodings import base as enc_base
 from .encodings.base import (RowGroup, SparseCOO, get_codec, header_shape,
                              is_header, normalize_slices)
@@ -51,9 +55,15 @@ def _slice_columns(columns: Dict[str, Any], lo: int, hi: int) -> Dict[str, Any]:
 
 
 class DeltaTensorStore:
-    def __init__(self, object_store: ObjectStore, root: str = "tensor_store"):
-        self.table = DeltaTable.create(object_store, root)
+    def __init__(self, object_store: ObjectStore, root: str = "tensor_store",
+                 io: Optional[ReadExecutor] = None):
+        self.table = DeltaTable.create(object_store, root, io=io)
         self._header_cache: Dict[str, Dict[str, Any]] = {}
+
+    @property
+    def io(self) -> ReadExecutor:
+        """Shared read executor all fetches for this store go through."""
+        return self.table.io
 
     # -- write -------------------------------------------------------------
 

@@ -7,22 +7,25 @@ scale-out machinery:
 
 * **per-host sharding**: host *h* of *H* owns sample rows ``h::H`` — each
   host's reads prune to its own files (no shared-prefix hot-spotting);
-* **prefetch**: a background thread keeps ``depth`` batches decoded ahead;
-* **hedged reads** (straggler mitigation): an optional second attempt for
-  a slow chunk fetch, racing the original (object-store tail latencies);
+* **prefetch**: up to ``depth`` future batches are fetched ahead as jobs on
+  the shared :class:`~repro.lake.io.ReadExecutor` (no private threads —
+  chunk gets inside each batch also fan out on the same executor);
+* **hedged reads** (straggler mitigation): an optional duplicate attempt
+  for a slow batch fetch via ``ReadExecutor.hedged`` (object-store reads
+  are idempotent, so racing duplicates is safe);
 * **determinism**: batch order is a pure function of (seed, step), so an
   elastic restart at step *s* replays exactly the remaining stream.
 """
 
 from __future__ import annotations
 
-import queue
-import threading
-from typing import Any, Dict, Iterator, Optional, Tuple
+from concurrent.futures import Future
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 
 from ..core.store import DeltaTensorStore
+from ..lake.io import ReadExecutor
 
 
 def write_token_dataset(store: DeltaTensorStore, tokens: np.ndarray, *,
@@ -34,49 +37,28 @@ def write_token_dataset(store: DeltaTensorStore, tokens: np.ndarray, *,
                      chunk_dims=1, target_file_bytes=target_file_bytes)
 
 
-def hedged(fn, *, hedge_after_s: float = 0.5, attempts: int = 2):
-    """Run ``fn`` with tail-latency hedging: if the first attempt hasn't
-    finished after ``hedge_after_s``, race a duplicate; first result wins.
-    Object-store reads are idempotent, so duplicates are safe — this is the
-    classic straggler mitigation for p99 fetches on large fleets."""
-    import concurrent.futures as cf
-
-    def run():
-        ex = cf.ThreadPoolExecutor(max_workers=attempts)
-        try:
-            futures = [ex.submit(fn)]
-            done, _ = cf.wait(futures, timeout=hedge_after_s)
-            if not done and attempts > 1:
-                futures.append(ex.submit(fn))     # race a duplicate
-            done, _ = cf.wait(futures, return_when=cf.FIRST_COMPLETED)
-            return next(iter(done)).result()
-        finally:
-            ex.shutdown(wait=False)               # abandon the straggler
-
-    return run
-
-
 class FTSFLoader:
     def __init__(self, store: DeltaTensorStore, tensor_id: str, *,
                  batch_size: int, host_index: int = 0, n_hosts: int = 1,
                  seed: int = 0, prefetch_depth: int = 2,
-                 start_step: int = 0, hedge_after_s: Optional[float] = None):
+                 start_step: int = 0, hedge_after_s: Optional[float] = None,
+                 io: Optional[ReadExecutor] = None):
         self.store = store
         self.tid = tensor_id
         self.batch = batch_size
         self.host = host_index
         self.n_hosts = n_hosts
         self.hedge_after_s = hedge_after_s
+        self.io = io or store.io
         n_samples = store.shape_of(tensor_id)[0]
         self.owned = np.arange(n_samples)[host_index::n_hosts]
         if len(self.owned) < batch_size:
             raise ValueError("fewer owned samples than batch size")
         self.seed = seed
         self.step = start_step
-        self.depth = prefetch_depth
-        self._q: "queue.Queue[Tuple[int, np.ndarray]]" = queue.Queue(prefetch_depth)
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
+        self.depth = max(1, prefetch_depth)
+        self._pending: Dict[int, Future] = {}
+        self._closed = False
 
     # deterministic sample plan: pure function of (seed, step)
     def _plan(self, step: int) -> np.ndarray:
@@ -99,36 +81,29 @@ class FTSFLoader:
         def read(a, b):
             fn = lambda: self.store.get_slice(self.tid, [(int(a), int(b))])
             if self.hedge_after_s is not None:
-                return hedged(fn, hedge_after_s=self.hedge_after_s)()
+                return self.io.hedged(fn, hedge_after_s=self.hedge_after_s)
             return fn()
 
         return np.concatenate([read(a, b) for a, b in parts], axis=0)
 
-    def _worker(self):
-        step = self.step
-        while not self._stop.is_set():
-            batch = self._fetch(step)
-            while not self._stop.is_set():
-                try:
-                    self._q.put((step, batch), timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
-            step += 1
+    def _ensure_prefetch(self) -> None:
+        for step in range(self.step, self.step + self.depth):
+            if step not in self._pending:
+                self._pending[step] = self.io.submit(self._fetch, step)
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        if self._thread is None:
-            self._thread = threading.Thread(target=self._worker, daemon=True)
-            self._thread.start()
-        while True:
-            step, tokens = self._q.get()
+        while not self._closed:
+            self._ensure_prefetch()
+            step = self.step
+            tokens = self._pending.pop(step).result()
+            self.step = step + 1
             labels = np.concatenate([tokens[:, 1:],
                                      np.full((len(tokens), 1), -1, np.int32)],
                                     axis=1)
             yield {"tokens": tokens, "labels": labels, "step": step}
 
     def close(self):
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=2)
-            self._thread = None
+        self._closed = True
+        for fut in self._pending.values():
+            fut.cancel()
+        self._pending.clear()

@@ -1,6 +1,8 @@
 from .object_store import (InMemoryObjectStore, LatencyModel, LocalFSObjectStore,
                            ObjectNotFoundError, ObjectStore, PutIfAbsentError)
 from .log import CommitConflict, DeltaLog, Snapshot
+from .io import (BlockCache, ReadExecutor, ReadStats, get_default_executor,
+                 set_default_executor)
 from .table import DeltaTable
 from . import columnar
 
@@ -8,4 +10,6 @@ __all__ = [
     "InMemoryObjectStore", "LatencyModel", "LocalFSObjectStore", "ObjectStore",
     "ObjectNotFoundError", "PutIfAbsentError", "CommitConflict", "DeltaLog",
     "Snapshot", "DeltaTable", "columnar",
+    "BlockCache", "ReadExecutor", "ReadStats", "get_default_executor",
+    "set_default_executor",
 ]

@@ -1,0 +1,314 @@
+"""Shared parallel read-path subsystem for the lake layer.
+
+Every read consumer in the framework (``DeltaTable.scan``, the tensor
+store's ``get``/``get_coo``/``get_slice``, the FTSF training loader, serve
+weight loading) funnels its object-store fetches through one
+:class:`ReadExecutor`, which provides:
+
+* a **bounded I/O thread pool** so a multi-chunk read costs the makespan of
+  concurrent gets, not the sum of per-file RTTs (Deep Lake's streaming
+  fetch layer is the reference design here);
+* an **LRU block cache** keyed by ``(store, object key)`` holding immutable
+  data-file bytes — delta data files are write-once, so cached blocks can
+  never go stale; log/metadata reads bypass the cache;
+* **request hedging** (straggler mitigation): if a get hasn't finished
+  after ``hedge_after_s`` a duplicate is raced against it and the first
+  result wins — object-store reads are idempotent so duplicates are safe;
+* a **work pool** for composite background jobs (loader prefetch steps,
+  parallel weight loads). Composite jobs may block on I/O futures; I/O
+  tasks never submit work, so the two-pool split is deadlock-free by
+  construction.
+"""
+
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
+
+DEFAULT_MAX_WORKERS = 8
+DEFAULT_CACHE_BYTES = 64 << 20
+
+# monotonically increasing token per object-store instance: cache keys must
+# survive id() reuse after GC, so the token rides on the store object itself
+_store_tokens = itertools.count()
+
+
+def _store_token(store: Any) -> int:
+    tok = getattr(store, "_io_cache_token", None)
+    if tok is None:
+        tok = next(_store_tokens)
+        try:
+            store._io_cache_token = tok
+        except AttributeError:  # __slots__ store: fall back to identity
+            return id(store)
+    return tok
+
+
+@dataclass
+class ReadStats:
+    """Counters for the read path (thread-safe)."""
+
+    gets: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    hedges_launched: int = 0
+    hedges_won: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def bump(self, **deltas: int) -> None:
+        with self._lock:
+            for k, d in deltas.items():
+                setattr(self, k, getattr(self, k) + d)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.gets = self.cache_hits = self.cache_misses = 0
+            self.hedges_launched = self.hedges_won = 0
+
+
+class BlockCache:
+    """Thread-safe LRU over immutable blocks, bounded by total bytes."""
+
+    def __init__(self, capacity_bytes: int = DEFAULT_CACHE_BYTES):
+        self.capacity = int(capacity_bytes)
+        self._blocks: "OrderedDict[Tuple[int, str], bytes]" = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.Lock()
+
+    def get(self, key: Tuple[int, str]) -> Optional[bytes]:
+        with self._lock:
+            data = self._blocks.get(key)
+            if data is not None:
+                self._blocks.move_to_end(key)
+            return data
+
+    def put(self, key: Tuple[int, str], data: bytes) -> None:
+        if len(data) > self.capacity:
+            return  # never evict the whole cache for one oversized block
+        with self._lock:
+            old = self._blocks.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old)
+            self._blocks[key] = data
+            self._bytes += len(data)
+            while self._bytes > self.capacity:
+                _, evicted = self._blocks.popitem(last=False)
+                self._bytes -= len(evicted)
+
+    def invalidate(self, key: Tuple[int, str]) -> None:
+        with self._lock:
+            old = self._blocks.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._blocks.clear()
+            self._bytes = 0
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._blocks)
+
+
+class ReadExecutor:
+    """Bounded thread pool + block cache + hedging for object-store reads.
+
+    ``max_workers`` bounds concurrent in-flight gets (the paper's 1 Gbps
+    testbed saturates around 8 streams; width is configurable so benchmarks
+    can sweep it). ``cache_bytes=0`` disables caching. ``hedge_after_s``
+    enables hedged gets on every fetch routed through this executor.
+    """
+
+    def __init__(self, max_workers: int = DEFAULT_MAX_WORKERS, *,
+                 cache_bytes: int = DEFAULT_CACHE_BYTES,
+                 hedge_after_s: Optional[float] = None,
+                 hedge_attempts: int = 2):
+        self.max_workers = max(1, int(max_workers))
+        self.cache = BlockCache(cache_bytes)
+        self.stats = ReadStats()
+        self.hedge_after_s = hedge_after_s
+        self.hedge_attempts = max(1, int(hedge_attempts))
+        self._io = ThreadPoolExecutor(
+            max_workers=self.max_workers, thread_name_prefix="lakeio")
+        self._work = ThreadPoolExecutor(
+            max_workers=self.max_workers, thread_name_prefix="lakework")
+
+    # -- raw gets ------------------------------------------------------------
+
+    def _get_raw(self, store: Any, key: str) -> bytes:
+        self.stats.bump(gets=1)
+        if self.hedge_after_s is None or self.hedge_attempts <= 1:
+            return store.get(key)
+        return self.hedged(lambda: store.get(key),
+                           hedge_after_s=self.hedge_after_s,
+                           attempts=self.hedge_attempts)
+
+    def _fetch_miss(self, store: Any, key: str,
+                    cache_key: Optional[Tuple[int, str]]) -> bytes:
+        data = self._get_raw(store, key)
+        if cache_key is not None:
+            self.cache.put(cache_key, data)
+        return data
+
+    # -- public fetch API ----------------------------------------------------
+
+    def fetch(self, store: Any, key: str, *, cacheable: bool = True) -> bytes:
+        """One object get through cache + pool + hedging."""
+        ck = (_store_token(store), key) if cacheable and self.cache.capacity else None
+        if ck is not None:
+            hit = self.cache.get(ck)
+            if hit is not None:
+                self.stats.bump(cache_hits=1)
+                return hit
+            self.stats.bump(cache_misses=1)
+        return self._io.submit(self._fetch_miss, store, key, ck).result()
+
+    def fetch_ordered(self, store: Any, keys: Sequence[str], *,
+                      cacheable: bool = True) -> Iterator[bytes]:
+        """Fetch ``keys`` concurrently, yield results in input order.
+
+        Submission is windowed at ``2 * max_workers`` outstanding gets so a
+        scan over thousands of files doesn't swamp the pool queue; decode of
+        block *i* overlaps the in-flight fetches of blocks > *i*.
+        """
+        keys = list(keys)
+        window = max(2 * self.max_workers, 2)
+        pending: List[Future] = []
+
+        def submit(key: str) -> Future:
+            ck = (_store_token(store), key) if cacheable and self.cache.capacity else None
+            if ck is not None:
+                hit = self.cache.get(ck)
+                if hit is not None:
+                    self.stats.bump(cache_hits=1)
+                    f: Future = Future()
+                    f.set_result(hit)
+                    return f
+                self.stats.bump(cache_misses=1)
+            return self._io.submit(self._fetch_miss, store, key, ck)
+
+        try:
+            for key in keys[:window]:
+                pending.append(submit(key))
+            for i in range(len(keys)):
+                if i + window < len(keys):
+                    pending.append(submit(keys[i + window]))
+                yield pending[i].result()
+        finally:
+            for f in pending:
+                f.cancel()
+
+    def fetch_all(self, store: Any, keys: Sequence[str], *,
+                  cacheable: bool = True) -> List[bytes]:
+        return list(self.fetch_ordered(store, keys, cacheable=cacheable))
+
+    # -- composite work ------------------------------------------------------
+
+    def submit(self, fn: Callable, *args: Any, **kwargs: Any) -> Future:
+        """Run a composite job (may itself call ``fetch``) in the work pool."""
+        return self._work.submit(fn, *args, **kwargs)
+
+    def map(self, fn: Callable, items: Sequence[Any]) -> List[Any]:
+        """Apply ``fn`` to each item concurrently; results in input order."""
+        futures = [self._work.submit(fn, it) for it in items]
+        return [f.result() for f in futures]
+
+    # -- hedging -------------------------------------------------------------
+
+    def hedged(self, fn: Callable[[], Any], *,
+               hedge_after_s: Optional[float] = None,
+               attempts: Optional[int] = None) -> Any:
+        """Run ``fn`` with tail-latency hedging; first result wins.
+
+        Generalizes the loader's old ad-hoc helper: attempts run on
+        dedicated daemon threads (never pool workers), so hedging can never
+        deadlock the I/O or work pools even under full saturation. Losing
+        stragglers are abandoned — safe because reads are idempotent.
+        """
+        after = self.hedge_after_s if hedge_after_s is None else hedge_after_s
+        n = self.hedge_attempts if attempts is None else max(1, int(attempts))
+        if after is None or n <= 1:
+            return fn()
+
+        results: "queue.SimpleQueue[Tuple[int, bool, Any]]" = queue.SimpleQueue()
+
+        def attempt(i: int) -> None:
+            try:
+                results.put((i, True, fn()))
+            except BaseException as e:  # surfaced below
+                results.put((i, False, e))
+
+        def launch(i: int) -> None:
+            t = threading.Thread(target=attempt, args=(i,), daemon=True,
+                                 name=f"lakehedge-{i}")
+            t.start()
+
+        launch(0)
+        launched, outstanding = 1, 1
+        last_err: Optional[BaseException] = None
+        while True:
+            try:
+                timeout = after if launched < n else None
+                i, ok, val = results.get(timeout=timeout)
+            except queue.Empty:
+                self.stats.bump(hedges_launched=1)
+                launch(launched)
+                launched += 1
+                outstanding += 1
+                continue
+            outstanding -= 1
+            if ok:
+                if i > 0:
+                    self.stats.bump(hedges_won=1)
+                return val
+            last_err = val
+            if outstanding == 0:
+                raise last_err
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def shutdown(self, wait: bool = False) -> None:
+        """Release pool threads. Pools spawn threads lazily (an idle
+        executor holds none), but long-lived processes that churn through
+        private executors should close them — or use ``with`` blocks."""
+        self._work.shutdown(wait=wait)
+        self._io.shutdown(wait=wait)
+
+    def __enter__(self) -> "ReadExecutor":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(wait=False)
+
+
+# -- process-wide default ----------------------------------------------------
+
+_default_lock = threading.Lock()
+_default_executor: Optional[ReadExecutor] = None
+
+
+def get_default_executor() -> ReadExecutor:
+    """Process-wide shared executor (lazily created)."""
+    global _default_executor
+    with _default_lock:
+        if _default_executor is None:
+            _default_executor = ReadExecutor()
+        return _default_executor
+
+
+def set_default_executor(executor: Optional[ReadExecutor]) -> None:
+    """Swap the process-wide executor (tests / width sweeps)."""
+    global _default_executor
+    with _default_lock:
+        _default_executor = executor

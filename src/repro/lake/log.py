@@ -62,6 +62,9 @@ class DeltaLog:
         # log files are immutable: a version's snapshot never changes, so
         # replayed snapshots are cached for the life of the client
         self._snap_cache: Dict[int, Snapshot] = {}
+        # highest version known to exist (None = never probed). Commit files
+        # are append-only, so a cached floor only ever moves forward.
+        self._latest: Optional[int] = None
 
     # -- write side ---------------------------------------------------------
 
@@ -87,10 +90,14 @@ class DeltaLog:
                 self.store.put(_log_key(self.table, version),
                                payload.encode("utf-8"), if_absent=True)
             except PutIfAbsentError:
+                # somebody else owns this version; remember it so the retry
+                # probes forward instead of re-listing the whole log dir
+                self._latest = max(self._latest or -1, version)
                 attempt += 1
                 if expected_version is not None or attempt > max_retries:
                     raise CommitConflict(f"lost commit race at v{version}")
                 continue
+            self._latest = max(self._latest or -1, version)
             if version % CHECKPOINT_INTERVAL == 0:
                 self._write_checkpoint(version)
             return version
@@ -109,7 +116,34 @@ class DeltaLog:
     # -- read side ----------------------------------------------------------
 
     def latest_version(self) -> int:
-        """-1 when the table does not exist yet."""
+        """-1 when the table does not exist yet.
+
+        A full ``_delta_log/`` prefix list happens at most once per client
+        (cold start on a table with no checkpoint). Afterwards the cached
+        latest — raised by ``_last_checkpoint`` when available — is extended
+        by probing ``head(v+1)`` forward, which is O(new commits) instead of
+        O(log length) and issues zero list requests on hot commit paths.
+        """
+        floor = self._latest
+        if floor is None:
+            floor = self._checkpoint_version()
+        if floor is None:
+            floor = self._list_latest()
+        v = floor
+        while self.store.exists(_log_key(self.table, v + 1)):
+            v += 1
+        self._latest = v
+        return v
+
+    def _checkpoint_version(self) -> Optional[int]:
+        """Version recorded in ``_last_checkpoint`` (a known-to-exist floor)."""
+        try:
+            ptr = json.loads(self.store.get(_last_ckpt_key(self.table)))
+            return int(ptr["version"])
+        except (ObjectNotFoundError, KeyError, ValueError, json.JSONDecodeError):
+            return None
+
+    def _list_latest(self) -> int:
         latest = -1
         prefix = f"{self.table}/_delta_log/"
         for key in self.store.list(prefix):
@@ -142,6 +176,12 @@ class DeltaLog:
         return None
 
     def snapshot(self, version: Optional[int] = None) -> Snapshot:
+        if version is not None:
+            # pinned reads on a cached snapshot are fully local: log files
+            # are immutable, so no freshness probe is needed
+            cached = self._snap_cache.get(version)
+            if cached is not None:
+                return cached
         latest = self.latest_version()
         if latest < 0:
             raise ObjectNotFoundError(f"no delta table at {self.table}")

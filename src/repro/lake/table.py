@@ -6,6 +6,12 @@ Data skipping: every ``add`` action carries per-column min/max stats from
 That file-pruning is the mechanism behind the paper's read-slice wins: a
 slice of tensor rows touches only the files whose chunk_index range overlaps
 the slice.
+
+The read path is split in two phases: :meth:`plan_scan` resolves a snapshot
+and prunes add-actions using only log metadata (no data bytes touched);
+:meth:`scan` hands the surviving files to the shared :class:`ReadExecutor`,
+which fetches them concurrently (with block caching and optional hedging)
+while batches decode in plan order as their bytes arrive.
 """
 
 from __future__ import annotations
@@ -16,6 +22,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import columnar
+from .io import ReadExecutor, get_default_executor
 from .log import DeltaLog, Snapshot
 from .object_store import ObjectStore
 
@@ -70,18 +77,37 @@ def _apply_mask(batch: Dict[str, Any], mask: Optional[np.ndarray]) -> Dict[str, 
     return out
 
 
+def _merge_batches(batches: List[Dict[str, Any]]) -> Dict[str, Any]:
+    if not batches:
+        return {}
+    out: Dict[str, Any] = {}
+    for key in batches[0]:
+        vals = [b[key] for b in batches if key in b]
+        if vals and isinstance(vals[0], np.ndarray) and vals[0].dtype.kind != "O":
+            out[key] = np.concatenate(vals)
+        else:
+            merged: List[Any] = []
+            for v in vals:
+                merged.extend(v)
+            out[key] = merged
+    return out
+
+
 class DeltaTable:
-    def __init__(self, store: ObjectStore, path: str):
+    def __init__(self, store: ObjectStore, path: str,
+                 io: Optional[ReadExecutor] = None):
         self.store = store
         self.path = path.rstrip("/")
         self.log = DeltaLog(store, self.path)
+        self.io = io or get_default_executor()
 
     # -- lifecycle -----------------------------------------------------------
 
     @classmethod
     def create(cls, store: ObjectStore, path: str,
-               metadata: Optional[Dict[str, Any]] = None) -> "DeltaTable":
-        t = cls(store, path)
+               metadata: Optional[Dict[str, Any]] = None,
+               io: Optional[ReadExecutor] = None) -> "DeltaTable":
+        t = cls(store, path, io=io)
         if t.exists():
             return t
         t.log.commit([{"metaData": metadata or {}}], op="CREATE TABLE")
@@ -122,13 +148,18 @@ class DeltaTable:
 
     # -- read -----------------------------------------------------------------
 
-    def scan(self, columns: Optional[Sequence[str]] = None, *,
-             filters: Optional[Filters] = None,
-             partition_filters: Optional[Dict[str, str]] = None,
-             version: Optional[int] = None,
-             prune_only: bool = False) -> Iterator[Dict[str, Any]]:
-        """Yield column batches (one per surviving data file)."""
+    def plan_scan(self, *, filters: Optional[Filters] = None,
+                  partition_filters: Optional[Dict[str, str]] = None,
+                  version: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Phase 1 of a read: pruned add-actions, metadata only.
+
+        Partition pruning and min/max data skipping run against the log
+        snapshot; nothing is fetched. The returned actions (in deterministic
+        path order) are what the fetch phase — or an external scheduler —
+        turns into object gets.
+        """
         snap = self.log.snapshot(version)
+        plan = []
         for add in snap.add_actions():
             if partition_filters:
                 pv = add.get("partitionValues", {})
@@ -136,10 +167,29 @@ class DeltaTable:
                     continue
             if not _file_overlaps(add, filters):
                 continue
-            if prune_only:
+            plan.append(add)
+        return plan
+
+    def scan(self, columns: Optional[Sequence[str]] = None, *,
+             filters: Optional[Filters] = None,
+             partition_filters: Optional[Dict[str, str]] = None,
+             version: Optional[int] = None,
+             prune_only: bool = False) -> Iterator[Dict[str, Any]]:
+        """Yield column batches (one per surviving data file).
+
+        Phase 2 of a read: the planned files are fetched concurrently
+        through the shared executor; batches decode and yield in plan order
+        as their gets complete, so results are bit-for-bit identical to a
+        serial scan while I/O time is the makespan of parallel fetches.
+        """
+        plan = self.plan_scan(filters=filters, partition_filters=partition_filters,
+                              version=version)
+        if prune_only:
+            for add in plan:
                 yield {"__path__": add["path"], "__size__": add["size"]}
-                continue
-            data = self.store.get(f"{self.path}/{add['path']}")
+            return
+        keys = [f"{self.path}/{add['path']}" for add in plan]
+        for data in self.io.fetch_ordered(self.store, keys):
             batch = columnar.read_table(data, columns)
             yield _apply_mask(batch, _row_mask(batch, filters))
 
@@ -148,21 +198,9 @@ class DeltaTable:
                  partition_filters: Optional[Dict[str, str]] = None,
                  version: Optional[int] = None) -> Dict[str, Any]:
         """Concatenate all surviving batches into one column dict."""
-        batches = list(self.scan(columns, filters=filters,
-                                 partition_filters=partition_filters, version=version))
-        if not batches:
-            return {}
-        out: Dict[str, Any] = {}
-        for key in batches[0]:
-            vals = [b[key] for b in batches if key in b]
-            if vals and isinstance(vals[0], np.ndarray) and vals[0].dtype.kind != "O":
-                out[key] = np.concatenate(vals)
-            else:
-                merged: List[Any] = []
-                for v in vals:
-                    merged.extend(v)
-                out[key] = merged
-        return out
+        return _merge_batches(list(self.scan(
+            columns, filters=filters, partition_filters=partition_filters,
+            version=version)))
 
     def files(self, version: Optional[int] = None) -> List[Dict[str, Any]]:
         return self.log.snapshot(version).add_actions()
@@ -176,27 +214,34 @@ class DeltaTable:
     # -- maintenance -----------------------------------------------------------
 
     def compact(self, max_rows_per_file: int = 1 << 20) -> int:
-        """Rewrite small files into bigger ones (single commit)."""
+        """Rewrite small files into bigger ones (single commit).
+
+        Files are compacted **per partition group** so the rewritten
+        add-actions keep their ``partitionValues`` — merging across
+        partitions would silently break ``partition_filters`` pruning (and
+        would fuse incompatible row schemas, e.g. tensor headers with chunk
+        rows) after OPTIMIZE.
+        """
         snap = self.log.snapshot()
-        batches, removes = [], []
+        groups: Dict[Tuple[Tuple[str, str], ...], List[Dict[str, Any]]] = {}
         for add in snap.add_actions():
-            data = self.store.get(f"{self.path}/{add['path']}")
-            batches.append(columnar.read_table(data))
-            removes.append(add["path"])
-        if not batches:
+            pv = add.get("partitionValues", {}) or {}
+            groups.setdefault(tuple(sorted(pv.items())), []).append(add)
+        if not groups:
             return snap.version
-        merged: Dict[str, Any] = {}
-        for key in batches[0]:
-            vals = [b[key] for b in batches]
-            if isinstance(vals[0], np.ndarray) and vals[0].dtype.kind != "O":
-                merged[key] = np.concatenate(vals)
-            else:
-                acc: List[Any] = []
-                for v in vals:
-                    acc.extend(v)
-                merged[key] = acc
-        add = self.append(merged, commit=False)
-        return self.commit_adds([add], removes=removes, op="OPTIMIZE")
+        new_adds, removes = [], []
+        for pv_items, adds in groups.items():
+            if len(adds) <= 1:
+                continue  # already one file for this partition
+            keys = [f"{self.path}/{a['path']}" for a in adds]
+            batches = [columnar.read_table(data)
+                       for data in self.io.fetch_ordered(self.store, keys)]
+            removes.extend(a["path"] for a in adds)
+            new_adds.append(self.append(_merge_batches(batches), commit=False,
+                                        partition_values=dict(pv_items)))
+        if not new_adds:
+            return snap.version
+        return self.commit_adds(new_adds, removes=removes, op="OPTIMIZE")
 
     def vacuum(self) -> int:
         """Delete unreferenced data files (expired by remove actions)."""

@@ -1,1 +1,3 @@
-from .engine import Request, ServeEngine
+from .engine import Request, ServeEngine, load_weights, save_weights
+
+__all__ = ["Request", "ServeEngine", "load_weights", "save_weights"]

@@ -4,6 +4,12 @@ Slots are fixed (static shapes for jit); finished sequences free their slot
 and the engine immediately prefill-admits the next queued request into it.
 Per-slot KV caches live in one batched cache pytree, so decode is a single
 jit'd step for the whole batch regardless of request boundaries.
+
+Weights live in the Delta Tensor store as one FTSF tensor per param leaf;
+:func:`load_weights` fetches every leaf concurrently through the shared
+:class:`~repro.lake.io.ReadExecutor` (each leaf's chunk files additionally
+fan out on the same executor), so cold-start weight load time is the
+makespan of parallel object-store gets, not the serial sum.
 """
 
 from __future__ import annotations
@@ -16,8 +22,59 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.store import DeltaTensorStore
+from ..lake.io import ReadExecutor
 from ..models import transformer
 from ..models.config import ArchConfig
+
+
+# -- weight load/store -------------------------------------------------------
+
+from ..dist.sharding import _path_str as _leaf_name
+
+
+def save_weights(store: DeltaTensorStore, params: Any, *,
+                 prefix: str = "serve_weights") -> List[str]:
+    """Persist a param pytree: one FTSF tensor per leaf, one atomic commit.
+
+    Re-saving under the same prefix atomically replaces the previous
+    generation (old files are removed in the same commit — a reader never
+    sees two generations of one leaf).
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    adds, tids = [], []
+    for path, leaf in leaves:
+        tid = f"{prefix}/{_leaf_name(path)}"
+        adds.extend(store.put_deferred(np.asarray(leaf), tensor_id=tid,
+                                       layout="ftsf"))
+        tids.append(tid)
+    wanted = set(tids)
+    removes = [a["path"] for a in store.table.files()
+               if a.get("partitionValues", {}).get("tensor") in wanted]
+    store.table.commit_adds(adds, removes=removes, op=f"SAVE WEIGHTS {prefix}")
+    return tids
+
+
+def load_weights(store: DeltaTensorStore, template: Any, *,
+                 prefix: str = "serve_weights",
+                 io: Optional[ReadExecutor] = None) -> Any:
+    """Load a param pytree saved by :func:`save_weights`.
+
+    ``template`` (e.g. ``jax.eval_shape`` of ``init_params``, or a real
+    params pytree) supplies the tree structure and leaf dtypes. All leaf
+    tensors are fetched in parallel on the shared executor.
+    """
+    io = io or store.io
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    names = [_leaf_name(p) for p, _ in flat]
+
+    def fetch(name: str) -> np.ndarray:
+        return store.get(f"{prefix}/{name}")
+
+    arrays = io.map(fetch, names)
+    out = [arr.astype(np.dtype(leaf.dtype), copy=False)
+           for arr, (_, leaf) in zip(arrays, flat)]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 @dataclass

@@ -30,16 +30,8 @@ import numpy as np
 
 from ..core.encodings.base import normalize_slices
 from ..core.store import DeltaTensorStore
+from ..dist.sharding import _path_str
 from ..lake import ObjectStore
-
-
-def _path_str(path) -> str:
-    def part(k):
-        for attr in ("key", "name", "idx"):
-            if hasattr(k, attr):
-                return str(getattr(k, attr))
-        return str(k)
-    return "/".join(part(k) for k in path)
 
 
 def _leaf_hash(x: np.ndarray) -> str:

@@ -1,0 +1,14 @@
+"""Test bootstrap: make ``repro`` importable without an install step.
+
+The tier-1 command sets ``PYTHONPATH=src``; this keeps bare ``pytest`` (IDE
+runs, CI matrices) working too. ``tests/__init__.py`` makes the directory a
+package so cross-module helpers import relatively
+(``from .test_encodings import sparse_tensor``).
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

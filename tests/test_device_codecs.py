@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from ._hypothesis_compat import given, settings, st  # skips property tests if hypothesis is missing
 
 from repro.core import device as dev
 

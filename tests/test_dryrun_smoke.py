@@ -29,6 +29,8 @@ with mesh:
     lowered = jt.lower(*cell.args)
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns one dict per device
+        cost = cost[0] if cost else {}
     from repro.analysis import hlo_cost
     c = hlo_cost.analyze(compiled.as_text())
 print(json.dumps({"flops": c.flops, "bytes": c.bytes,

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from ._hypothesis_compat import given, settings, st  # skips property tests if hypothesis is missing
 
 from repro.core import SparseCOO, choose_layout, density, get_codec
 from repro.core.encodings.base import normalize_slices

@@ -1,15 +1,16 @@
-"""Straggler mitigation: hedged object-store reads."""
+"""Straggler mitigation: hedged object-store reads via the shared executor."""
 
 import time
 
 import numpy as np
 
 from repro.core import DeltaTensorStore
-from repro.data.pipeline import FTSFLoader, hedged, write_token_dataset
-from repro.lake import InMemoryObjectStore
+from repro.data.pipeline import FTSFLoader, write_token_dataset
+from repro.lake import InMemoryObjectStore, ReadExecutor
 
 
 def test_hedged_duplicate_beats_straggler():
+    io = ReadExecutor(max_workers=2)
     calls = {"n": 0}
 
     def flaky():
@@ -19,11 +20,29 @@ def test_hedged_duplicate_beats_straggler():
         return calls["n"]
 
     t0 = time.perf_counter()
-    result = hedged(flaky, hedge_after_s=0.1)()
+    result = io.hedged(flaky, hedge_after_s=0.1)
     dt = time.perf_counter() - t0
     assert result in (1, 2)
     assert calls["n"] >= 2        # a duplicate was raced
     assert dt < 1.4               # and it won
+    assert io.stats.hedges_launched >= 1
+
+
+def test_hedged_disabled_runs_inline():
+    io = ReadExecutor()
+    assert io.hedged(lambda: 42) == 42          # no hedge_after_s configured
+    assert io.stats.hedges_launched == 0
+
+
+def test_hedged_propagates_error_when_all_attempts_fail():
+    io = ReadExecutor()
+
+    def boom():
+        raise RuntimeError("nope")
+
+    import pytest
+    with pytest.raises(RuntimeError, match="nope"):
+        io.hedged(boom, hedge_after_s=0.05, attempts=2)
 
 
 def test_loader_with_hedging_yields_correct_batches():
@@ -37,3 +56,11 @@ def test_loader_with_hedging_yields_correct_batches():
     for row in b["tokens"]:
         assert row[0] % 8 == 0 and (row == np.arange(row[0], row[0] + 8)).all()
     loader.close()
+
+
+def test_pipeline_module_defines_no_threading_primitives():
+    """The ad-hoc hedged()/thread machinery moved to repro.lake.io."""
+    import repro.data.pipeline as pipeline
+    assert not hasattr(pipeline, "hedged")
+    assert not hasattr(pipeline, "threading")
+    assert not hasattr(pipeline, "queue")

@@ -2,7 +2,7 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from ._hypothesis_compat import given, settings, st  # skips property tests if hypothesis is missing
 
 from repro.lake import (CommitConflict, DeltaLog, DeltaTable, InMemoryObjectStore,
                         LatencyModel, LocalFSObjectStore, ObjectNotFoundError,

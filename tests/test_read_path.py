@@ -1,0 +1,345 @@
+"""Parallel read-path subsystem: executor, cache, hedging, makespan model."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DeltaTensorStore
+from repro.lake import (DeltaLog, DeltaTable, InMemoryObjectStore, LatencyModel,
+                        ReadExecutor)
+
+from .test_encodings import sparse_tensor
+
+LAYOUTS = ["ftsf", "coo", "csr", "csf", "bsgs"]
+
+
+class CountingStore(InMemoryObjectStore):
+    """Counts get/list calls; optionally stalls the first get of chosen keys."""
+
+    def __init__(self, *args, stall_keys=(), stall_s=0.0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.get_calls = 0
+        self.got_keys = []
+        self.list_calls = 0
+        self.stall_keys = set(stall_keys)
+        self.stall_s = stall_s
+
+    def get(self, key):
+        self.get_calls += 1
+        self.got_keys.append(key)
+        if key in self.stall_keys:
+            self.stall_keys.discard(key)   # only the first attempt stalls
+            time.sleep(self.stall_s)
+        return super().get(key)
+
+    def list(self, prefix=""):
+        self.list_calls += 1
+        return super().list(prefix)
+
+
+# ---------------------------------------------------------------------------
+# executor + cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_accounting():
+    obj = CountingStore()
+    io = ReadExecutor(max_workers=4, cache_bytes=1 << 20)
+    obj.put("a", b"x" * 100)
+    obj.put("b", b"y" * 100)
+
+    assert io.fetch(obj, "a") == b"x" * 100
+    assert (io.stats.cache_hits, io.stats.cache_misses) == (0, 1)
+    assert io.fetch(obj, "a") == b"x" * 100          # warm
+    assert (io.stats.cache_hits, io.stats.cache_misses) == (1, 1)
+    assert obj.get_calls == 1                        # one real get only
+
+    out = list(io.fetch_ordered(obj, ["a", "b", "a"]))
+    assert out == [b"x" * 100, b"y" * 100, b"x" * 100]
+    assert obj.get_calls == 2                        # only "b" was fetched
+
+
+def test_cache_lru_eviction_bounded_by_bytes():
+    from repro.lake.io import BlockCache
+    c = BlockCache(capacity_bytes=250)
+    c.put((0, "a"), b"x" * 100)
+    c.put((0, "b"), b"y" * 100)
+    c.get((0, "a"))                                  # refresh a
+    c.put((0, "c"), b"z" * 100)                      # evicts b (LRU)
+    assert c.get((0, "a")) is not None
+    assert c.get((0, "b")) is None
+    assert c.get((0, "c")) is not None
+    assert c.nbytes <= 250
+    c.put((0, "huge"), b"!" * 1000)                  # oversized: not admitted
+    assert c.get((0, "huge")) is None
+
+
+def test_cache_disabled_with_zero_capacity():
+    obj = CountingStore()
+    obj.put("a", b"data")
+    io = ReadExecutor(cache_bytes=0)
+    io.fetch(obj, "a")
+    io.fetch(obj, "a")
+    assert obj.get_calls == 2
+
+
+def test_fetch_ordered_preserves_order_under_concurrency():
+    obj = CountingStore()
+    keys = [f"k{i:03d}" for i in range(50)]
+    for i, k in enumerate(keys):
+        obj.put(k, f"payload-{i}".encode())
+    io = ReadExecutor(max_workers=8, cache_bytes=0)
+    out = list(io.fetch_ordered(obj, keys))
+    assert out == [f"payload-{i}".encode() for i in range(50)]
+
+
+# ---------------------------------------------------------------------------
+# parallel == serial, bit-for-bit, all codecs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_parallel_get_slice_matches_serial_all_codecs(layout):
+    x = sparse_tensor((24, 6, 5), density=0.15, seed=11)
+    obj = InMemoryObjectStore()
+    serial = DeltaTensorStore(obj, "s", io=ReadExecutor(max_workers=1, cache_bytes=0))
+    tid = serial.put(x, layout=layout, target_file_bytes=2 << 10)
+    parallel = DeltaTensorStore(obj, "s", io=ReadExecutor(max_workers=8, cache_bytes=0))
+    parallel._header_cache.clear()
+
+    np.testing.assert_array_equal(serial.get(tid), parallel.get(tid))
+    for spec in ([(3, 9)], [(0, 24), (2, 5)], [(20, 24)]):
+        a = serial.get_slice(tid, spec)
+        b = parallel.get_slice(tid, spec)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_warm_cache_repeat_get_zero_object_store_requests():
+    lm = LatencyModel()
+    obj = InMemoryObjectStore(latency=lm)
+    store = DeltaTensorStore(obj, "t", io=ReadExecutor(max_workers=4))
+    x = np.arange(4 * 64, dtype=np.float32).reshape(4, 64)
+    tid = store.put(x, layout="ftsf", target_file_bytes=1 << 10)
+    v = store.version()
+
+    np.testing.assert_array_equal(store.get(tid, version=v), x)  # cold: fills cache
+    lm.reset()
+    # version-pinned repeat read: snapshot cache + block cache -> fully local
+    np.testing.assert_array_equal(store.get(tid, version=v), x)
+    assert lm.requests == 0                            # zero gets/lists/heads
+    assert lm.elapsed_s == 0.0
+
+    # unpinned repeat read pays only freshness probes (HEADs), no data bytes
+    lm.reset()
+    np.testing.assert_array_equal(store.get(tid), x)
+    assert lm.bytes_moved == 0
+    assert 1 <= lm.requests <= 2
+
+
+# ---------------------------------------------------------------------------
+# hedging under an injected straggler
+# ---------------------------------------------------------------------------
+
+def test_hedged_fetch_beats_injected_straggler():
+    obj = CountingStore(stall_keys={"slow"}, stall_s=1.5)
+    obj.put("slow", b"payload")
+    io = ReadExecutor(max_workers=4, cache_bytes=0, hedge_after_s=0.1)
+    t0 = time.perf_counter()
+    assert io.fetch(obj, "slow") == b"payload"
+    assert time.perf_counter() - t0 < 1.2              # duplicate won
+    assert io.stats.hedges_launched >= 1
+    assert io.stats.hedges_won >= 1
+    assert obj.get_calls >= 2
+
+
+def test_scan_hedges_straggling_chunk_file():
+    obj = CountingStore(stall_s=1.5)
+    io = ReadExecutor(max_workers=4, cache_bytes=0, hedge_after_s=0.15)
+    t = DeltaTable.create(obj, "tbl", io=io)
+    for i in range(4):
+        t.append({"v": np.full(8, i)})
+    # make one data file a straggler on its first fetch
+    victim = f"tbl/{t.files()[1]['path']}"
+    obj.stall_keys = {victim}
+    t0 = time.perf_counter()
+    out = t.read_all()
+    assert time.perf_counter() - t0 < 1.2
+    assert sorted(set(out["v"])) == [0, 1, 2, 3]
+    assert io.stats.hedges_launched >= 1
+
+
+# ---------------------------------------------------------------------------
+# LatencyModel makespan accounting
+# ---------------------------------------------------------------------------
+
+def test_latency_model_serial_unchanged():
+    lm = LatencyModel(rtt_s=0.01, bandwidth_bps=1e9)
+    for _ in range(8):
+        lm.charge(0)
+    assert lm.elapsed_s == pytest.approx(0.08)
+    assert lm.serial_s == pytest.approx(0.08)
+
+
+def _charge_concurrently(lm, n, nbytes):
+    """Issue n charges from n distinct threads (rendezvous before charging),
+    modeling genuinely concurrent requests."""
+    import threading
+    barrier = threading.Barrier(n)
+
+    def one():
+        barrier.wait()
+        lm.charge(nbytes)
+
+    ths = [threading.Thread(target=one) for _ in range(n)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+
+
+def test_latency_model_makespan_width_gt_1():
+    lm = LatencyModel(rtt_s=0.01, bandwidth_bps=1e9, parallelism=4)
+    _charge_concurrently(lm, 8, 0)         # pure-RTT requests, 8 threads
+    # 8 concurrent requests over 4 channels -> 2 rounds of RTT
+    assert lm.elapsed_s == pytest.approx(0.02)
+    assert lm.serial_s == pytest.approx(0.08)
+    assert lm.requests == 8
+
+
+def test_latency_model_same_thread_requests_stay_serial():
+    # causality: one thread cannot overlap its own sequential requests,
+    # whatever the configured channel width
+    lm = LatencyModel(rtt_s=0.01, bandwidth_bps=1e9, parallelism=8)
+    for _ in range(8):
+        lm.charge(0)
+    assert lm.elapsed_s == pytest.approx(0.08)
+
+
+def test_latency_model_bandwidth_clamps_makespan():
+    # RTTs parallelize; payload bytes still share the one 1 Gbps link
+    lm = LatencyModel(rtt_s=0.0, bandwidth_bps=1e9, parallelism=8)
+    _charge_concurrently(lm, 8, 125_000_000)   # 1 Gb each
+    assert lm.elapsed_s == pytest.approx(8.0, rel=1e-6)   # link-bound
+    lm2 = LatencyModel(rtt_s=0.010, bandwidth_bps=1e9, parallelism=8)
+    _charge_concurrently(lm2, 8, 1_250)        # 10 us transfer, RTT-bound
+    assert lm2.elapsed_s == pytest.approx(0.01001, rel=1e-3)
+
+
+def test_latency_model_reset_clears_channels():
+    lm = LatencyModel(parallelism=4)
+    lm.charge(100)
+    lm.reset()
+    assert lm.elapsed_s == 0.0 and lm.serial_s == 0.0 and lm.requests == 0
+    lm.charge(0)
+    assert lm.elapsed_s == pytest.approx(lm.rtt_s)
+
+
+# ---------------------------------------------------------------------------
+# plan/fetch split
+# ---------------------------------------------------------------------------
+
+def test_plan_scan_prunes_without_fetching_data():
+    obj = CountingStore()
+    t = DeltaTable.create(obj, "tbl", io=ReadExecutor(cache_bytes=0))
+    for lo in range(0, 40, 10):
+        t.append({"chunk_index": np.arange(lo, lo + 10)})
+    obj.got_keys.clear()
+    plan = t.plan_scan(filters={"chunk_index": (12, 13)})
+    assert len(plan) == 1                                # pruned to one file
+    assert plan[0]["partitionValues"] == {}
+    # planning reads log metadata only, never a data file
+    assert all("_delta_log" in k for k in obj.got_keys)
+    paths = {a["path"] for a in plan}
+    batches = list(t.scan(filters={"chunk_index": (12, 13)}))
+    assert len(batches) == 1
+    np.testing.assert_array_equal(batches[0]["chunk_index"], [12, 13])
+    assert paths <= {a["path"] for a in t.files()}
+
+
+# ---------------------------------------------------------------------------
+# compact keeps partitionValues (regression)
+# ---------------------------------------------------------------------------
+
+def test_compact_preserves_partition_values():
+    obj = InMemoryObjectStore()
+    t = DeltaTable.create(obj, "tbl", io=ReadExecutor(cache_bytes=0))
+    for i in range(3):
+        t.append({"v": np.full(4, i)}, partition_values={"tensor": "a"})
+    for i in range(3):
+        t.append({"v": np.full(4, 10 + i)}, partition_values={"tensor": "b"})
+    t.compact()
+    files = t.files()
+    assert len(files) == 2                 # one merged file per partition
+    pvs = sorted(f["partitionValues"]["tensor"] for f in files)
+    assert pvs == ["a", "b"]
+    # partition pruning still works after OPTIMIZE
+    out = t.read_all(partition_filters={"tensor": "a"})
+    assert sorted(set(out["v"])) == [0, 1, 2]
+    out_b = t.read_all(partition_filters={"tensor": "b"})
+    assert sorted(set(out_b["v"])) == [10, 11, 12]
+
+
+def test_compact_after_tensor_put_keeps_store_readable():
+    obj = InMemoryObjectStore()
+    store = DeltaTensorStore(obj, "t", io=ReadExecutor(cache_bytes=0))
+    x = sparse_tensor((16, 8), density=0.3, seed=3)
+    tid = store.put(x, layout="coo", target_file_bytes=1 << 10)
+    store.table.compact()
+    store._header_cache.clear()
+    np.testing.assert_array_equal(store.get(tid), x)
+    np.testing.assert_array_equal(store.get_slice(tid, [(4, 9)]), x[4:9])
+
+
+# ---------------------------------------------------------------------------
+# latest_version: checkpoint floor + probe forward, not full lists
+# ---------------------------------------------------------------------------
+
+def test_latest_version_stops_listing_on_hot_path():
+    obj = CountingStore()
+    log = DeltaLog(obj, "tbl")
+    log.commit([{"metaData": {}}])
+    lists_after_first = obj.list_calls
+    for i in range(12):                    # crosses a checkpoint boundary
+        log.commit([{"add": {"path": f"f{i}", "size": 1, "stats": {}}}])
+    assert log.latest_version() == 12
+    # the cold start listed at most once; hot commits only probe forward
+    assert obj.list_calls == lists_after_first
+
+
+def test_latest_version_fresh_client_uses_checkpoint_floor():
+    obj = CountingStore()
+    log = DeltaLog(obj, "tbl")
+    for i in range(15):
+        log.commit([{"add": {"path": f"f{i}", "size": 1, "stats": {}}}])
+    fresh = DeltaLog(obj, "tbl")
+    obj.list_calls = 0
+    assert fresh.latest_version() == 14
+    assert obj.list_calls == 0             # floor came from _last_checkpoint
+    # and new external commits are still observed via probing
+    log.commit([{"add": {"path": "f15", "size": 1, "stats": {}}}])
+    assert fresh.latest_version() == 15
+
+
+def test_bench_read_path_meets_acceptance():
+    """bench_read_path: >=2x modeled speedup at width 8, cached repeat = 0 req."""
+    import re
+    import sys, os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks import bench_read_path
+
+    lines = bench_read_path.run(widths=(1, 8))
+    joined = "\n".join(lines)
+    m = re.search(r"read_path_speedup_w8,0\.0,get=([\d.]+)x slice=([\d.]+)x", joined)
+    assert m, joined
+    assert float(m.group(1)) >= 2.0
+    assert float(m.group(2)) >= 2.0
+    m = re.search(r"read_path_get_cached,[\d.]+,requests=(\d+)", joined)
+    assert m and int(m.group(1)) == 0
+
+
+def test_latest_version_empty_table():
+    obj = CountingStore()
+    log = DeltaLog(obj, "tbl")
+    assert log.latest_version() == -1
+    log.commit([{"metaData": {}}])
+    assert log.latest_version() == 0
