@@ -2,17 +2,26 @@
 
 The paper's testbed (1 Gbps, 10 ms RTT object store) is modeled by
 ``LatencyModel``; this bench sweeps the read executor width and reports the
-modeled I/O makespan for multi-chunk ``get`` / ``get_slice``, plus the
-warm-block-cache repeat read. Expected shape of the result:
+modeled I/O makespan for multi-chunk ``TensorRef.read()`` / slice reads,
+plus the warm-block-cache repeat read and the catalog's per-read metadata
+cost. Expected shape of the result:
 
 * width 1 == the old serial read path (sum of per-file RTTs);
 * width >= 8 cuts modeled read time >= 2x on multi-chunk tensors (RTTs
   overlap; payload bytes still share the one modeled link);
-* a warm cache turns repeat ``get`` of the same tensor into zero
-  object-store requests.
+* a warm cache turns repeat reads of a pinned tensor into zero
+  object-store requests;
+* repeated reads build the catalog ONCE (O(1) lookups after), where the
+  seed path re-walked the full file list per read.
+
+With ``--json`` (or via :func:`run`'s ``json_path``) the results are also
+written machine-readable to ``BENCH_read_path.json`` so the perf trajectory
+is tracked across PRs.
 """
 
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
@@ -24,6 +33,7 @@ from .common import fresh_store, row, timed
 
 SHAPE = (128, 3, 32, 32)
 TARGET_FILE_BYTES = 16 << 10     # force a few dozen chunk files
+CATALOG_REPEAT_READS = 20
 
 
 def _loaded_store(width: int, cache_bytes: int = 0):
@@ -36,9 +46,12 @@ def _loaded_store(width: int, cache_bytes: int = 0):
     return store, lm, x
 
 
-def run(widths=(1, 8, 16), repeats=None):
+def run(widths=(1, 8, 16), repeats=None, json_path=None):
     repeats = repeats or 1
     lines = []
+    results = {"bench": "read_path", "shape": list(SHAPE),
+               "target_file_bytes": TARGET_FILE_BYTES, "widths": {},
+               "speedup": {}, "cached": {}, "catalog": {}}
     # half the leading dim: a multi-file slice (the paper's X[0:100] analog
     # spans one file; parallel fetch pays off once a slice covers several)
     sl_hi = max(1, SHAPE[0] // 2)
@@ -46,30 +59,56 @@ def run(widths=(1, 8, 16), repeats=None):
 
     for width in widths:
         store, lm, _ = _loaded_store(width, cache_bytes=0)
-        n_files = len([a for a in store.table.files()
-                       if a["partitionValues"].get("kind") == "chunk"])
-        r = timed(lm, lambda: store.get("x"), repeats)
-        s = timed(lm, lambda: store.get_slice("x", [(0, sl_hi)]), repeats)
+        ref = store.open("x")
+        n_files = ref.n_chunk_files
+        r = timed(lm, ref.read, repeats)
+        s = timed(lm, lambda: ref.read_slice([(0, sl_hi)]), repeats)
         elapsed_by_width[width] = (r.io_s, s.io_s)
         lines.append(row(f"read_path_get_w{width}", r.io_s * 1e6,
                          f"n_chunk_files={n_files} bytes={r.bytes_moved}"))
         lines.append(row(f"read_path_slice_w{width}", s.io_s * 1e6,
                          f"bytes={s.bytes_moved}"))
+        results["widths"][str(width)] = {
+            "n_chunk_files": n_files,
+            "get_io_s": r.io_s, "get_bytes": r.bytes_moved,
+            "slice_io_s": s.io_s, "slice_bytes": s.bytes_moved,
+        }
 
-    # warm block cache: repeat get of the same tensor -> zero requests
-    # (version-pinned, as a serving reader would: snapshot + blocks cached)
+    # warm block cache: repeat read of the same pinned ref -> zero requests
+    # (as a serving reader would: snapshot + catalog + blocks all cached)
     store, lm, x = _loaded_store(8, cache_bytes=256 << 20)
     v = store.version()
-    store.get("x", version=v)            # cold read fills the cache
+    ref = store.open("x", version=v)
+    np.testing.assert_array_equal(ref.read(), x)       # cold read fills caches
     lm.reset()
-    np.testing.assert_array_equal(store.get("x", version=v), x)
+    np.testing.assert_array_equal(ref.read(), x)
     lines.append(row("read_path_get_cached", lm.elapsed_s * 1e6,
                      f"requests={lm.requests} bytes={lm.bytes_moved} "
                      f"hits={store.io.stats.cache_hits}"))
+    results["cached"]["pinned"] = {
+        "io_s": lm.elapsed_s, "requests": lm.requests,
+        "bytes": lm.bytes_moved, "block_cache_hits": store.io.stats.cache_hits}
     lm.reset()
-    np.testing.assert_array_equal(store.get("x"), x)   # unpinned warm read
+    np.testing.assert_array_equal(store.open("x").read(), x)  # unpinned warm
     lines.append(row("read_path_get_cached_unpinned", lm.elapsed_s * 1e6,
                      f"requests={lm.requests} bytes={lm.bytes_moved}"))
+    results["cached"]["unpinned"] = {
+        "io_s": lm.elapsed_s, "requests": lm.requests, "bytes": lm.bytes_moved}
+
+    # catalog metadata cost: N repeated pinned reads = ONE snapshot walk.
+    # The seed-path equivalent walked table.files() on every get (O(files)
+    # metadata work per read); the catalog makes repeats O(1) lookups.
+    store, lm, x = _loaded_store(8, cache_bytes=256 << 20)
+    v = store.version()
+    store.catalog_stats.update(builds=0, hits=0)
+    for _ in range(CATALOG_REPEAT_READS):
+        store.open("x", version=v).read()
+    builds, hits = store.catalog_stats["builds"], store.catalog_stats["hits"]
+    lines.append(row("read_path_catalog_metadata", 0.0,
+                     f"reads={CATALOG_REPEAT_READS} snapshot_walks={builds} "
+                     f"o1_lookups={hits}"))
+    results["catalog"] = {"repeat_reads": CATALOG_REPEAT_READS,
+                          "snapshot_walks": builds, "o1_lookups": hits}
 
     if 1 in elapsed_by_width:
         base_get, base_sl = elapsed_by_width[1]
@@ -78,9 +117,16 @@ def run(widths=(1, 8, 16), repeats=None):
                 continue
             lines.append(row(f"read_path_speedup_w{w}", 0.0,
                              f"get={base_get / g:.2f}x slice={base_sl / s:.2f}x"))
+            results["speedup"][str(w)] = {"get": base_get / g,
+                                          "slice": base_sl / s}
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
     return lines
 
 
 if __name__ == "__main__":
-    for line in run():
+    for line in run(json_path="BENCH_read_path.json"):
         print(line)

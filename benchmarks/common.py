@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict
+from typing import Callable
 
 from repro.configs.paper_store import PAPER_STORE
 from repro.lake import InMemoryObjectStore, LatencyModel

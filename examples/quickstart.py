@@ -1,14 +1,15 @@
 """Quickstart: the paper's system in 60 lines.
 
-Store tensors in a delta table under all five formats, read them back,
-slice-read without touching most of the data, and time-travel.
+Store tensors in a delta table under all five formats, read them lazily
+through snapshot-pinned TensorRef handles, slice-read without touching most
+of the data, batch writes atomically, and time-travel.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import DeltaTensorStore, SparseCOO, choose_layout
+from repro.core import DeltaTensorStore, choose_layout
 from repro.data.synthetic import uber_like
 from repro.lake import InMemoryObjectStore, LatencyModel
 
@@ -21,38 +22,52 @@ def main():
     dense = np.random.default_rng(0).standard_normal((64, 3, 32, 32)).astype(
         np.float32)
     print("policy for dense tensor:", choose_layout(dense))
-    tid = store.put(dense, tensor_id="images",          # auto -> ftsf
-                target_file_bytes=64 << 10)         # ~12 chunk files
-    np.testing.assert_array_equal(store.get("images"), dense)
+    store.put(dense, tensor_id="images",                # auto -> ftsf
+              target_file_bytes=64 << 10)               # ~12 chunk files
+
+    # --- lazy handle: metadata costs one header read, slicing is numpy ----
+    ref = store.open("images")
+    print(f"{ref!r}: shape={ref.shape} dtype={ref.dtype} "
+          f"stored={ref.nbytes/1e3:.1f} kB in {ref.n_chunk_files} chunk files")
 
     lm.reset()
-    sl = store.get_slice("images", [(10, 14)])         # 4 of 64 chunks
+    sl = ref[10:14]                                    # 4 of 64 chunks
     print(f"slice read moved {lm.bytes_moved/1e3:.1f} kB "
           f"(full tensor is {dense.nbytes/1e3:.1f} kB)")
     np.testing.assert_array_equal(sl, dense[10:14])
+    np.testing.assert_array_equal(ref[0, ..., 16], dense[0, ..., 16])
 
-    # --- sparse tensor -> every sparse format ------------------------------
+    fut = ref.read_async()                             # fans out on the executor
+    np.testing.assert_array_equal(fut.result(), dense)
+
+    # --- sparse tensor -> every sparse format, one atomic commit ----------
     sparse = uber_like((48, 24, 64, 64), nnz_ratio=0.002)
     print(f"\nsparse tensor: {sparse.shape}, nnz={sparse.nnz} "
           f"({sparse.density:.4%})")
+    with store.batch(op="PUT ALL SPARSE FORMATS") as b:
+        for layout in ("coo", "csr", "csc", "csf", "bsgs"):
+            b.put(sparse, layout=layout, tensor_id=f"pickups-{layout}")
     for layout in ("coo", "csr", "csc", "csf", "bsgs"):
-        tid = store.put(sparse, layout=layout, tensor_id=f"pickups-{layout}")
-        nbytes = store.tensor_bytes(tid)
-        print(f"  {layout:5s}: {nbytes/1e3:8.1f} kB "
-              f"({nbytes/(sparse.nnz*40):.2%} of a COO blob)")
-        np.testing.assert_array_equal(store.get(tid), sparse.to_dense())
+        r = store.open(f"pickups-{layout}")
+        print(f"  {layout:5s}: {r.nbytes/1e3:8.1f} kB "
+              f"({r.nbytes/(sparse.nnz*40):.2%} of a COO blob) "
+              f"coo-native={r.codec.supports_coo}")
+        np.testing.assert_array_equal(r.read(), sparse.to_dense())
 
     # slice read: day 7 only, via block/fiber pushdown
-    np.testing.assert_array_equal(store.get_slice("pickups-bsgs", [(7, 8)]),
+    np.testing.assert_array_equal(store.open("pickups-bsgs")[7:8],
                                   sparse.to_dense()[7:8])
 
     # --- ACID + time travel -------------------------------------------------
     v = store.version()
+    old = store.open("images")                         # pinned at v
     store.put(dense * 2, tensor_id="images", overwrite=True)
-    np.testing.assert_array_equal(store.get("images"), dense * 2)
-    np.testing.assert_array_equal(store.get("images", version=v), dense)
-    print(f"\ntime travel: version {v} still serves the original tensor")
+    np.testing.assert_array_equal(store.open("images").read(), dense * 2)
+    np.testing.assert_array_equal(old.read(), dense)   # ref still sees v
+    np.testing.assert_array_equal(store.open("images", version=v).read(), dense)
+    print(f"\ntime travel: a ref pinned at v{v} still serves the original")
     print("tensors in store:", [t for t, _ in store.list_tensors()])
+    print("catalog metadata work:", store.catalog_stats)
 
 
 if __name__ == "__main__":

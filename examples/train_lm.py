@@ -12,7 +12,6 @@ mid-training failure + restore-from-last-commit.
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax

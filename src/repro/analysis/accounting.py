@@ -5,7 +5,7 @@ so the ratio stays the assignment's definition."""
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 

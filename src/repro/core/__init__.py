@@ -1,12 +1,17 @@
 """The paper's primary contribution: tensor storage in a delta table.
 
 Five codecs (FTSF, COO, CSR/CSC, CSF, BSGS), the 10% sparsity policy, the
-DeltaTensorStore facade, and device-side (jit) encodings for in-training use.
+DeltaTensorStore facade with its handle API (Catalog / TensorRef /
+WriteBatch), and device-side (jit) encodings for in-training use.
 """
-from .encodings.base import SparseCOO, get_codec, normalize_slices
+from .encodings.base import Codec, SparseCOO, get_codec, normalize_slices
 from .encodings import ftsf, coo, csr, csf, bsgs  # noqa: F401 (register codecs)
 from .sparsity import SPARSE_THRESHOLD, choose_layout, density
+from .catalog import Catalog, TensorEntry, TensorRef
+from .batch import BatchClosedError, WriteBatch
 from .store import DeltaTensorStore
 
-__all__ = ["SparseCOO", "get_codec", "normalize_slices", "SPARSE_THRESHOLD",
-           "choose_layout", "density", "DeltaTensorStore"]
+__all__ = ["Codec", "SparseCOO", "get_codec", "normalize_slices",
+           "SPARSE_THRESHOLD", "choose_layout", "density", "DeltaTensorStore",
+           "Catalog", "TensorEntry", "TensorRef", "WriteBatch",
+           "BatchClosedError"]

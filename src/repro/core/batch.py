@@ -1,0 +1,139 @@
+"""WriteBatch — stage many tensor writes/deletes, land ONE atomic commit.
+
+Replaces the ad-hoc two-phase code that each writer (checkpointer, serve
+weight saver) used to hand-roll over ``put_deferred`` + ``commit_adds``:
+
+    with store.batch(op="CHECKPOINT step=7") as b:
+        for name, arr in leaves:
+            b.put(arr, tensor_id=f"{name}@7", layout="ftsf")
+    print(b.version)          # the one committed table version
+
+Part files are uploaded as they are staged (invisible until the commit);
+``__exit__`` commits everything — puts, overwrites, deletes, raw rows — as
+one delta-log action list, so readers observe either all of the batch or
+none of it. An exception inside the ``with`` block abandons the batch:
+uploaded files stay invisible to every snapshot (vacuum reclaims them) and
+**no header is cached**, which is the fix for the old put_deferred
+staleness bug where a failed batched commit left a poisoned header cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .store import DeltaTensorStore
+
+
+class BatchClosedError(RuntimeError):
+    pass
+
+
+class WriteBatch:
+    """Stages puts/deletes against one base snapshot; commits atomically.
+
+    The base catalog is pinned at the first staging call: every
+    existence/overwrite/delete lookup in this batch resolves against that
+    one snapshot, so what a batch removes does not shift under a
+    concurrent writer. (The final commit itself is the delta log's
+    optimistic append — a racing commit between pin and land can still
+    interleave; serializable writers should fence with
+    ``table.commit_adds(..., expected_version=...)`` semantics instead.)
+    """
+
+    def __init__(self, store: "DeltaTensorStore", *, op: str = "WRITE BATCH"):
+        self._store = store
+        self.op = op
+        self._adds: List[Dict[str, Any]] = []
+        self._removes: List[str] = []
+        # header seeds applied to the store's by-path cache ONLY on a
+        # successful commit (never for an abandoned batch)
+        self._header_seeds: List[tuple] = []
+        self._staged_tids: List[str] = []
+        self._base = None  # catalog pinned at first staging call
+        self._closed = False
+        self.version: Optional[int] = None  # set by commit()
+
+    # -- staging ---------------------------------------------------------------
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise BatchClosedError("WriteBatch already committed or abandoned")
+
+    def put(self, tensor: Any, *, layout: str = "auto",
+            tensor_id: Optional[str] = None, overwrite: bool = False,
+            target_file_bytes: Optional[int] = None, **codec_params) -> str:
+        """Stage one tensor; returns its id. Files upload now, commit later."""
+        self._check_open()
+        layout, tid = self._store._resolve_tid(tensor, layout, tensor_id)
+        # all checks run BEFORE any byte uploads: a rejected put must not
+        # cost encode+upload bandwidth or leave orphaned invisible files
+        if tid in self._staged_tids:
+            raise ValueError(f"tensor {tid!r} staged twice in one batch")
+        existing = self._existing_paths(tid)
+        if existing and not overwrite:
+            raise ValueError(
+                f"tensor {tid!r} already exists (use overwrite=True)")
+        adds, header_seed = self._store._encode_and_upload(
+            tensor, layout=layout, tensor_id=tid,
+            target_file_bytes=target_file_bytes, **codec_params)
+        self._removes.extend(existing)
+        self._adds.extend(adds)
+        if header_seed is not None:
+            self._header_seeds.append(header_seed)
+        self._staged_tids.append(tid)
+        return tid
+
+    def delete(self, tid: str, *, missing_ok: bool = False) -> None:
+        """Stage removal of every file of ``tid`` (header + chunks)."""
+        self._check_open()
+        paths = self._existing_paths(tid)
+        if not paths and not missing_ok:
+            raise KeyError(f"tensor {tid!r} not found")
+        self._removes.extend(paths)
+
+    def add_rows(self, columns: Dict[str, Any], *,
+                 partition_values: Optional[Dict[str, str]] = None) -> None:
+        """Stage one raw table file (e.g. a checkpoint manifest row)."""
+        self._check_open()
+        self._adds.append(self._store.table.append(
+            columns, commit=False, partition_values=partition_values or {}))
+
+    def _existing_paths(self, tid: str) -> List[str]:
+        if self._base is None:
+            self._base = self._store.catalog()   # pin the base snapshot
+        return self._base.entry(tid).paths if tid in self._base else []
+
+    # -- terminal states -------------------------------------------------------
+
+    @property
+    def staged(self) -> List[str]:
+        return list(self._staged_tids)
+
+    def commit(self) -> int:
+        """Land every staged action in one atomic delta commit."""
+        self._check_open()
+        self._closed = True
+        if not self._adds and not self._removes:
+            self.version = self._store.table.version()
+            return self.version
+        self.version = self._store.table.commit_adds(
+            self._adds, removes=self._removes, op=self.op)
+        # headers become cacheable only now: the data is visible and the
+        # header file path is immutable, so this can never go stale
+        for path, cols in self._header_seeds:
+            self._store._seed_header(path, cols)
+        return self.version
+
+    def abandon(self) -> None:
+        """Drop the batch; uploaded part files remain invisible."""
+        self._closed = True
+
+    def __enter__(self) -> "WriteBatch":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.abandon()
+        elif not self._closed:
+            self.commit()

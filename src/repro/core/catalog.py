@@ -1,0 +1,296 @@
+"""Snapshot-pinned tensor catalog + lazy TensorRef handles.
+
+The eager ``DeltaTensorStore.get/get_slice`` paths used to re-walk the full
+``table.files()`` list on every access: O(files) metadata work per read, and
+two reads in one burst could observe different table versions. The
+:class:`Catalog` fixes both: it is built **once per snapshot** by a single
+pass over the add-actions and indexes tensor-id -> (layout, header
+add-action, chunk add-actions), so every subsequent read is an O(1) dict
+lookup against one immutable table version.
+
+:class:`TensorRef` is the lazy handle the redesigned public API returns
+(``store.open(tid)``): metadata properties (``shape``/``dtype``/``layout``/
+``nbytes``) touch at most the 1-row header file, numpy-style
+``__getitem__`` maps int/slice/Ellipsis onto the paper's read-slice
+operation, and ``read_async`` fans the chunk fetches out on the shared
+:class:`~repro.lake.io.ReadExecutor` work pool. Refs opened from one
+catalog are snapshot-consistent with each other by construction — the Deep
+Lake / NeurStore "view over a pinned commit" model.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import (TYPE_CHECKING, Any, Dict, Iterator, List, Optional,
+                    Sequence, Tuple)
+
+import numpy as np
+
+from ..lake.log import Snapshot
+from ..lake.table import Filters, file_overlaps
+from .encodings.base import (SparseCOO, get_codec, header_dtype,
+                             header_shape, normalize_slices)
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle is typing-only
+    from .store import DeltaTensorStore
+
+
+@dataclass
+class TensorEntry:
+    """One tensor's add-actions inside a single snapshot."""
+
+    tensor_id: str
+    layout: str
+    header_adds: List[Dict[str, Any]] = field(default_factory=list)
+    chunk_adds: List[Dict[str, Any]] = field(default_factory=list)
+
+    @property
+    def nbytes(self) -> int:
+        return (sum(a["size"] for a in self.header_adds) +
+                sum(a["size"] for a in self.chunk_adds))
+
+    @property
+    def paths(self) -> List[str]:
+        return [a["path"] for a in self.header_adds + self.chunk_adds]
+
+
+class Catalog:
+    """Immutable tensor index over one table snapshot.
+
+    Built in one O(files) pass; every lookup afterwards is O(1). The store
+    caches catalogs per version (snapshots never change), so a read burst
+    pays the walk once, not once per read.
+    """
+
+    def __init__(self, store: "DeltaTensorStore", snapshot: Snapshot):
+        self._store = store
+        self._snapshot = snapshot
+        self._entries: Dict[str, TensorEntry] = {}
+        self._headers: Dict[str, Dict[str, Any]] = {}  # tid -> parsed header
+        for add in snapshot.add_actions():
+            pv = add.get("partitionValues", {}) or {}
+            tid = pv.get("tensor")
+            if tid is None:
+                continue  # non-tensor rows (e.g. checkpoint manifests)
+            entry = self._entries.get(tid)
+            if entry is None:
+                entry = self._entries[tid] = TensorEntry(
+                    tensor_id=tid, layout=pv.get("layout", "?"))
+            if pv.get("kind") == "header":
+                entry.header_adds.append(add)
+            else:
+                entry.chunk_adds.append(add)
+
+    # -- inventory -----------------------------------------------------------
+
+    @property
+    def version(self) -> int:
+        return self._snapshot.version
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, tid: str) -> bool:
+        return tid in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self._entries))
+
+    def tensors(self) -> List[Tuple[str, str]]:
+        """Sorted ``(tensor_id, layout)`` pairs — the old list_tensors."""
+        return sorted((t, e.layout) for t, e in self._entries.items())
+
+    def entry(self, tid: str) -> TensorEntry:
+        try:
+            return self._entries[tid]
+        except KeyError:
+            raise KeyError(f"tensor {tid!r} not found at v{self.version}") from None
+
+    # -- header access ---------------------------------------------------------
+
+    def header(self, tid: str) -> Dict[str, Any]:
+        """Parsed 1-row header columns; fetched once per (snapshot, tensor).
+
+        Header files are immutable and content-named, so the store-level
+        by-path cache (seeded by committed writes) and the executor block
+        cache both apply; a warm ref never touches the object store.
+        """
+        cols = self._headers.get(tid)
+        if cols is not None:
+            return cols
+        entry = self.entry(tid)
+        if not entry.header_adds:
+            raise KeyError(f"tensor {tid!r}: no header at v{self.version}")
+        add = entry.header_adds[0]
+        cols = self._store._header_for_path(add["path"])
+        self._headers[tid] = cols
+        return cols
+
+    # -- handles ---------------------------------------------------------------
+
+    def open(self, tid: str) -> "TensorRef":
+        return TensorRef(self, self.entry(tid))
+
+
+def _as_spec_item(x: Any) -> Optional[Tuple[int, int]]:
+    """Accept the legacy per-axis form: None or an (lo, hi) pair."""
+    if x is None:
+        return None
+    lo, hi = x
+    return int(lo), int(hi)
+
+
+class TensorRef:
+    """Lazy, snapshot-pinned handle to one stored tensor.
+
+    Nothing is fetched at construction. Metadata properties read (and cache)
+    only the tiny header file; ``read``/``read_slice``/``read_coo`` run the
+    paper's read-tensor / read-slice operations against the pinned snapshot,
+    pruning chunk files via codec pushdown before fanning fetches out on the
+    shared executor. ``__getitem__`` gives the numpy view of the same thing.
+    """
+
+    def __init__(self, catalog: Catalog, entry: TensorEntry):
+        self._catalog = catalog
+        self._entry = entry
+
+    # -- metadata (header-only) ------------------------------------------------
+
+    @property
+    def tensor_id(self) -> str:
+        return self._entry.tensor_id
+
+    @property
+    def layout(self) -> str:
+        return self._entry.layout
+
+    @property
+    def version(self) -> int:
+        """Table version this ref is pinned to."""
+        return self._catalog.version
+
+    @property
+    def header(self) -> Dict[str, Any]:
+        return self._catalog.header(self.tensor_id)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return header_shape(self.header)
+
+    @property
+    def dtype(self) -> np.dtype:
+        return header_dtype(self.header)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nbytes(self) -> int:
+        """Stored bytes across this tensor's files (encoded size)."""
+        return self._entry.nbytes
+
+    @property
+    def n_chunk_files(self) -> int:
+        return len(self._entry.chunk_adds)
+
+    @property
+    def codec(self):
+        return get_codec(self.layout)
+
+    def __repr__(self) -> str:
+        return (f"TensorRef({self.tensor_id!r}, layout={self.layout!r}, "
+                f"version={self.version})")
+
+    # -- reads -----------------------------------------------------------------
+
+    def _groups(self, filters: Optional[Filters] = None) -> List[Dict[str, Any]]:
+        """Header + surviving chunk batches, fetched concurrently."""
+        table = self._catalog._store.table
+        adds = [a for a in self._entry.chunk_adds if file_overlaps(a, filters)]
+        groups: List[Dict[str, Any]] = [self.header]
+        groups.extend(table.fetch_adds(adds, filters=filters))
+        return groups
+
+    def read(self) -> np.ndarray:
+        """Full dense read (the paper's read-tensor)."""
+        return self.codec.decode(self._groups())
+
+    def read_coo(self) -> SparseCOO:
+        """Sparse COO read; native when the codec supports it."""
+        if self.codec.supports_coo:
+            return self.codec.decode_coo(self._groups())
+        return SparseCOO.from_dense(self.read())
+
+    def read_slice(self, slices: Sequence[Optional[Tuple[int, int]]]) -> np.ndarray:
+        """The paper's read-slice: codec pushdown prunes chunk files first."""
+        codec = self.codec
+        if not codec.supports_slice:
+            raise NotImplementedError(
+                f"layout {self.layout!r} does not support slice reads")
+        spec = normalize_slices(self.shape, [_as_spec_item(s) for s in slices])
+        filters = codec.slice_filters(self.header, spec)
+        return codec.decode_slice(self._groups(filters or None), spec)
+
+    def __getitem__(self, item: Any) -> np.ndarray:
+        """Numpy-style lazy slicing: ints, contiguous slices, Ellipsis.
+
+        ``ref[3]``, ``ref[1:4, :, 2]``, ``ref[..., 0:2]`` all map onto
+        :meth:`read_slice`; integer axes are squeezed like numpy would.
+        """
+        spec, squeeze = self._item_to_spec(item)
+        out = self.read_slice(spec)
+        return out[tuple(0 if d in squeeze else slice(None)
+                         for d in range(out.ndim))] if squeeze else out
+
+    def _item_to_spec(self, item: Any):
+        shape = self.shape
+        items = list(item) if isinstance(item, tuple) else [item]
+        if items.count(Ellipsis) > 1:
+            raise IndexError("an index can only have a single ellipsis")
+        if Ellipsis in items:
+            i = items.index(Ellipsis)
+            fill = len(shape) - (len(items) - 1)
+            if fill < 0:
+                raise IndexError(f"too many indices for rank {len(shape)}")
+            items[i:i + 1] = [slice(None)] * fill
+        if len(items) > len(shape):
+            raise IndexError(f"too many indices for rank {len(shape)}")
+        spec: List[Optional[Tuple[int, int]]] = []
+        squeeze: List[int] = []
+        for d, it in enumerate(items):
+            dim = shape[d]
+            if isinstance(it, (int, np.integer)):
+                i = int(it) + dim if int(it) < 0 else int(it)
+                if not 0 <= i < dim:
+                    raise IndexError(
+                        f"index {int(it)} out of bounds for axis {d} (size {dim})")
+                spec.append((i, i + 1))
+                squeeze.append(d)
+            elif isinstance(it, slice):
+                if it.step not in (None, 1):
+                    raise IndexError("TensorRef slicing is contiguous (step=1)")
+                lo = 0 if it.start is None else int(it.start)
+                hi = dim if it.stop is None else int(it.stop)
+                spec.append((lo, hi))
+            else:
+                raise TypeError(f"unsupported index {it!r}")
+        return spec, squeeze
+
+    # -- async -----------------------------------------------------------------
+
+    def read_async(self, slices: Optional[Sequence] = None) -> "Future[np.ndarray]":
+        """Future of :meth:`read` (or :meth:`read_slice`) on the executor.
+
+        Runs in the executor's work pool; the chunk fetches inside fan out
+        on the I/O pool, so many refs can be resolved concurrently (serve
+        weight loads, checkpoint restores) without private threads.
+        """
+        io = self._catalog._store.io
+        if slices is None:
+            return io.submit(self.read)
+        return io.submit(self.read_slice, slices)
+
+    def read_coo_async(self) -> "Future[SparseCOO]":
+        return self._catalog._store.io.submit(self.read_coo)

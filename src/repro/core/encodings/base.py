@@ -149,9 +149,21 @@ def header_dtype(header: Dict[str, Any]) -> np.dtype:
 
 
 class Codec:
-    """Interface implemented by the five formats."""
+    """Interface implemented by the five formats.
+
+    Capability flags let callers (``TensorRef``) reject an unsupported
+    operation before any chunk bytes are fetched, instead of failing deep
+    inside decode:
+
+    * ``supports_slice`` — the codec implements :meth:`decode_slice` (and
+      usually :meth:`slice_filters` pushdown);
+    * ``supports_coo`` — the codec decodes natively to :class:`SparseCOO`
+      via ``decode_coo`` without materializing the dense tensor first.
+    """
 
     layout: str = "?"
+    supports_slice: bool = False
+    supports_coo: bool = False
 
     def encode(self, tensor: Any, **params) -> List[RowGroup]:
         raise NotImplementedError

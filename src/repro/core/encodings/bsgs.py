@@ -42,6 +42,8 @@ def _norm_block_shape(shape: Tuple[int, ...], block_shape) -> Tuple[int, ...]:
 
 class BSGSCodec(Codec):
     layout = "bsgs"
+    supports_slice = True
+    supports_coo = False      # decode_coo here is a dense round-trip, not native
 
     def encode(self, tensor: Any, *, block_shape=None, **_) -> List[RowGroup]:
         t = as_coo(tensor)

@@ -23,6 +23,8 @@ from .base import (Codec, RowGroup, SliceSpec, SparseCOO, as_coo,
 
 class COOCodec(Codec):
     layout = "coo"
+    supports_slice = True
+    supports_coo = True
 
     def encode(self, tensor: Any, **_) -> List[RowGroup]:
         t = as_coo(tensor).sorted()

@@ -52,6 +52,8 @@ def _build_tree(idx: np.ndarray, nnz: int, ndim: int):
 
 class CSFCodec(Codec):
     layout = "csf"
+    supports_slice = True
+    supports_coo = True
 
     def encode(self, tensor: Any, **_) -> List[RowGroup]:
         t = _dedupe(as_coo(tensor))

@@ -42,6 +42,8 @@ def _flatten_coo(t: SparseCOO, split: int, transpose: bool) -> Tuple[np.ndarray,
 class CSRCodec(Codec):
     layout = "csr"
     transpose = False
+    supports_slice = True
+    supports_coo = True
 
     def encode(self, tensor: Any, *, split: int = 1, **_) -> List[RowGroup]:
         t = as_coo(tensor)

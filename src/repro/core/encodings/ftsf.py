@@ -23,6 +23,8 @@ from .base import (Codec, RowGroup, SliceSpec, as_dense, first_scalar,
 
 class FTSFCodec(Codec):
     layout = "ftsf"
+    supports_slice = True
+    supports_coo = False      # dense chunks: COO reads densify first
 
     def encode(self, tensor: Any, *, chunk_dims: int = None, **_) -> List[RowGroup]:
         x = as_dense(tensor)

@@ -2,30 +2,44 @@
 
 ``put`` encodes a tensor with one of the five codecs and lands the row
 groups as parq-lite files in a single atomic commit, partitioned by
-``(tensor, kind)``. ``get``/``get_slice`` are the paper's read-tensor /
-read-slice operations: slice reads fetch the 1-row header, derive pushdown
-filters from the codec, and touch only the chunk files whose min/max stats
-overlap the slice. ``version=`` arguments give Delta time travel.
+``(tensor, kind)``. Reads go through the handle API: ``open`` returns a
+snapshot-pinned lazy :class:`~repro.core.catalog.TensorRef` whose
+``read``/``read_slice``/``read_coo``/``read_async`` are the paper's
+read-tensor / read-slice operations; ``version=`` arguments give Delta time
+travel. The legacy eager calls (``get``/``get_slice``/``get_coo``/...) are
+kept as thin wrappers over ``open``.
 
+Per-read metadata cost is O(1): a :class:`~repro.core.catalog.Catalog` is
+built once per table version (one pass over ``table.files()``) and cached,
+so a burst of reads shares one snapshot walk instead of paying it per call.
 All chunk fetches flow through the table's shared ``ReadExecutor``
 (``repro.lake.io``): surviving chunk files are fetched concurrently, decode
 streams in plan order as gets complete, repeat reads hit the block cache.
+
+Writes batch through :class:`~repro.core.batch.WriteBatch`
+(``with store.batch() as b: b.put(...)``): many tensors plus deletes land
+in ONE atomic commit, and headers are cached only after that commit
+succeeds (an abandoned batch leaves no stale state behind).
 """
 
 from __future__ import annotations
 
 import uuid
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..lake import DeltaTable, ObjectStore, ReadExecutor
-from .encodings import base as enc_base
-from .encodings.base import (RowGroup, SparseCOO, get_codec, header_shape,
-                             is_header, normalize_slices)
+from ..lake import DeltaTable, ObjectStore, ReadExecutor, columnar
+from .batch import WriteBatch
+from .catalog import Catalog, TensorRef
+from .encodings.base import SparseCOO, get_codec
 from .sparsity import choose_layout
 
 TARGET_FILE_BYTES = 4 << 20
+
+MAX_CACHED_CATALOGS = 16
+MAX_CACHED_HEADERS = 1024
 
 
 def _approx_row_bytes(columns: Dict[str, Any], rows: int) -> float:
@@ -58,34 +72,86 @@ class DeltaTensorStore:
     def __init__(self, object_store: ObjectStore, root: str = "tensor_store",
                  io: Optional[ReadExecutor] = None):
         self.table = DeltaTable.create(object_store, root, io=io)
-        self._header_cache: Dict[str, Dict[str, Any]] = {}
+        # per-version catalogs: snapshots are immutable, so a catalog never
+        # goes stale; LRU-capped for long-lived many-version clients
+        self._catalogs: "OrderedDict[int, Catalog]" = OrderedDict()
+        # parsed headers keyed by immutable data-file path (seeded on
+        # successful commits, filled on reads) — staleness-free by naming
+        self._headers_by_path: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        # catalog_stats shows the O(1) metadata claim: `builds` counts full
+        # snapshot walks, `hits` counts reads served by a cached catalog
+        self.catalog_stats: Dict[str, int] = {"builds": 0, "hits": 0}
 
     @property
     def io(self) -> ReadExecutor:
         """Shared read executor all fetches for this store go through."""
         return self.table.io
 
+    # -- catalog / handles ---------------------------------------------------
+
+    def catalog(self, version: Optional[int] = None) -> Catalog:
+        """The tensor index at ``version`` (latest if None); O(1) when cached."""
+        snap = self.table.snapshot(version)
+        cat = self._catalogs.get(snap.version)
+        if cat is not None:
+            self.catalog_stats["hits"] += 1
+            self._catalogs.move_to_end(snap.version)
+            return cat
+        cat = Catalog(self, snap)
+        self.catalog_stats["builds"] += 1
+        self._catalogs[snap.version] = cat
+        while len(self._catalogs) > MAX_CACHED_CATALOGS:
+            self._catalogs.popitem(last=False)
+        return cat
+
+    def open(self, tid: str, *, version: Optional[int] = None) -> TensorRef:
+        """Lazy snapshot-pinned handle; fetches nothing until read."""
+        return self.catalog(version).open(tid)
+
+    def _header_for_path(self, path: str) -> Dict[str, Any]:
+        cols = self._headers_by_path.get(path)
+        if cols is not None:
+            self._headers_by_path.move_to_end(path)
+            return cols
+        data = self.io.fetch(self.table.store, f"{self.table.path}/{path}")
+        cols = columnar.read_table(data)
+        self._seed_header(path, cols)
+        return cols
+
+    def _seed_header(self, path: str, cols: Dict[str, Any]) -> None:
+        self._headers_by_path[path] = cols
+        while len(self._headers_by_path) > MAX_CACHED_HEADERS:
+            self._headers_by_path.popitem(last=False)
+
     # -- write -------------------------------------------------------------
 
-    def put_deferred(self, tensor: Any, *, layout: str = "auto",
-                     tensor_id: Optional[str] = None,
-                     target_file_bytes: int = TARGET_FILE_BYTES,
-                     **codec_params) -> List[Dict[str, Any]]:
-        """Upload part files WITHOUT committing; returns add-actions.
-
-        Callers batch many tensors into one atomic ``table.commit_adds``
-        (the distributed-checkpoint two-phase commit).
-        """
+    def _resolve_tid(self, tensor: Any, layout: str,
+                     tensor_id: Optional[str]) -> Tuple[str, str]:
+        """Resolve (layout, tensor_id) without encoding or uploading anything,
+        so callers can run existence checks before paying any upload."""
         if layout == "auto":
             layout = choose_layout(tensor)
+        get_codec(layout)  # fail fast on unknown layouts
+        return layout, tensor_id or f"{layout}-{uuid.uuid4().hex[:12]}"
+
+    def _encode_and_upload(self, tensor: Any, *, layout: str,
+                           tensor_id: str,
+                           target_file_bytes: Optional[int] = None,
+                           **codec_params):
+        """Encode + upload part files (no commit). ``layout``/``tensor_id``
+        must already be resolved (see :meth:`_resolve_tid`). Returns
+        ``(add_actions, header_seed)`` where header_seed is
+        ``(path, columns)`` for post-commit caching, or None."""
         codec = get_codec(layout)
-        tid = tensor_id or f"{layout}-{uuid.uuid4().hex[:12]}"
+        tid = tensor_id
+        target = TARGET_FILE_BYTES if target_file_bytes is None else target_file_bytes
         groups = codec.encode(tensor, **{k: v for k, v in codec_params.items()
                                          if v is not None})
-        adds = []
+        adds: List[Dict[str, Any]] = []
+        header_seed = None
         for grp in groups:
             rows = len(next(iter(grp.columns.values())))
-            per_file = max(1, int(target_file_bytes //
+            per_file = max(1, int(target //
                                   max(_approx_row_bytes(grp.columns, rows), 1)))
             for lo in range(0, rows, per_file):
                 cols = _slice_columns(grp.columns, lo, min(rows, lo + per_file))
@@ -94,101 +160,65 @@ class DeltaTensorStore:
                     partition_values={"tensor": tid, "kind": grp.kind,
                                       "layout": layout}))
             if grp.kind == "header":
-                self._header_cache[tid] = grp.columns
+                header_seed = (adds[-1]["path"], grp.columns)
+        return adds, header_seed
+
+    def put_deferred(self, tensor: Any, *, layout: str = "auto",
+                     tensor_id: Optional[str] = None,
+                     target_file_bytes: int = TARGET_FILE_BYTES,
+                     **codec_params) -> List[Dict[str, Any]]:
+        """Upload part files WITHOUT committing; returns add-actions.
+
+        Low-level two-phase building block (callers pass the adds to
+        ``table.commit_adds`` themselves). Prefer :meth:`batch`, which also
+        handles overwrites/deletes and post-commit header caching. Note no
+        header is cached here — an abandoned upload must leave no trace.
+        """
+        layout, tid = self._resolve_tid(tensor, layout, tensor_id)
+        adds, _ = self._encode_and_upload(
+            tensor, layout=layout, tensor_id=tid,
+            target_file_bytes=target_file_bytes, **codec_params)
         return adds
+
+    def batch(self, *, op: str = "WRITE BATCH") -> WriteBatch:
+        """Stage many puts/deletes, commit them as ONE atomic version."""
+        return WriteBatch(self, op=op)
 
     def put(self, tensor: Any, *, layout: str = "auto", tensor_id: Optional[str] = None,
             overwrite: bool = False, target_file_bytes: int = TARGET_FILE_BYTES,
             **codec_params) -> str:
-        if layout == "auto":
-            layout = choose_layout(tensor)
-        tid = tensor_id or f"{layout}-{uuid.uuid4().hex[:12]}"
-
-        existing = [a["path"] for a in self.table.files()
-                    if a.get("partitionValues", {}).get("tensor") == tid]
-        if existing and not overwrite:
-            raise ValueError(f"tensor {tid!r} already exists (use overwrite=True)")
-
-        adds = self.put_deferred(tensor, layout=layout, tensor_id=tid,
-                                 target_file_bytes=target_file_bytes,
-                                 **codec_params)
-        self.table.commit_adds(adds, removes=existing, op="PUT TENSOR")
+        with self.batch(op="PUT TENSOR") as b:
+            tid = b.put(tensor, layout=layout, tensor_id=tensor_id,
+                        overwrite=overwrite, target_file_bytes=target_file_bytes,
+                        **codec_params)
         return tid
 
-    # -- read --------------------------------------------------------------
+    def delete(self, tid: str) -> None:
+        with self.batch(op="DELETE TENSOR") as b:
+            b.delete(tid, missing_ok=True)
 
-    def _layout_of(self, tid: str, version: Optional[int]) -> str:
-        for a in self.table.files(version):
-            pv = a.get("partitionValues", {})
-            if pv.get("tensor") == tid:
-                return pv["layout"]
-        raise KeyError(f"tensor {tid!r} not found")
-
-    def _header(self, tid: str, version: Optional[int]) -> Dict[str, Any]:
-        if version is None and tid in self._header_cache:
-            return self._header_cache[tid]
-        batches = list(self.table.scan(
-            partition_filters={"tensor": tid, "kind": "header"}, version=version))
-        if not batches:
-            raise KeyError(f"tensor {tid!r}: no header")
-        if version is None:
-            self._header_cache[tid] = batches[0]
-        return batches[0]
+    # -- read (legacy eager wrappers over the handle API) --------------------
 
     def get(self, tid: str, *, version: Optional[int] = None) -> np.ndarray:
-        layout = self._layout_of(tid, version)
-        codec = get_codec(layout)
-        groups = [self._header(tid, version)]
-        groups += list(self.table.scan(
-            partition_filters={"tensor": tid, "kind": "chunk"}, version=version))
-        return codec.decode(groups)
+        return self.open(tid, version=version).read()
 
     def get_coo(self, tid: str, *, version: Optional[int] = None) -> SparseCOO:
-        layout = self._layout_of(tid, version)
-        codec = get_codec(layout)
-        groups = [self._header(tid, version)]
-        groups += list(self.table.scan(
-            partition_filters={"tensor": tid, "kind": "chunk"}, version=version))
-        if hasattr(codec, "decode_coo"):
-            return codec.decode_coo(groups)
-        return SparseCOO.from_dense(codec.decode(groups))
+        return self.open(tid, version=version).read_coo()
 
     def get_slice(self, tid: str, slices: Sequence[Optional[Tuple[int, int]]], *,
                   version: Optional[int] = None) -> np.ndarray:
-        layout = self._layout_of(tid, version)
-        codec = get_codec(layout)
-        header = self._header(tid, version)
-        spec = normalize_slices(header_shape(header), slices)
-        filters = codec.slice_filters(header, spec)
-        groups: List[Dict[str, Any]] = [header]
-        groups += list(self.table.scan(
-            filters=filters or None,
-            partition_filters={"tensor": tid, "kind": "chunk"}, version=version))
-        return codec.decode_slice(groups, spec)
+        return self.open(tid, version=version).read_slice(slices)
 
-    # -- catalog -------------------------------------------------------------
+    # -- catalog conveniences -------------------------------------------------
 
     def list_tensors(self, version: Optional[int] = None) -> List[Tuple[str, str]]:
-        seen = {}
-        for a in self.table.files(version):
-            pv = a.get("partitionValues", {})
-            if "tensor" in pv:
-                seen[pv["tensor"]] = pv["layout"]
-        return sorted(seen.items())
+        return self.catalog(version).tensors()
 
     def shape_of(self, tid: str, *, version: Optional[int] = None) -> Tuple[int, ...]:
-        return header_shape(self._header(tid, version))
+        return self.open(tid, version=version).shape
 
     def tensor_bytes(self, tid: str, *, version: Optional[int] = None) -> int:
-        return sum(a["size"] for a in self.table.files(version)
-                   if a.get("partitionValues", {}).get("tensor") == tid)
-
-    def delete(self, tid: str) -> None:
-        removes = [a["path"] for a in self.table.files()
-                   if a.get("partitionValues", {}).get("tensor") == tid]
-        if removes:
-            self.table.commit_adds([], removes=removes, op="DELETE TENSOR")
-        self._header_cache.pop(tid, None)
+        return self.open(tid, version=version).nbytes
 
     def version(self) -> int:
         return self.table.version()

@@ -14,7 +14,10 @@ scale-out machinery:
   for a slow batch fetch via ``ReadExecutor.hedged`` (object-store reads
   are idempotent, so racing duplicates is safe);
 * **determinism**: batch order is a pure function of (seed, step), so an
-  elastic restart at step *s* replays exactly the remaining stream.
+  elastic restart at step *s* replays exactly the remaining stream. The
+  loader holds a snapshot-pinned :class:`~repro.core.catalog.TensorRef`,
+  so even a concurrent writer appending to the dataset table cannot change
+  what this epoch reads (and no batch pays a table-version probe).
 """
 
 from __future__ import annotations
@@ -50,7 +53,9 @@ class FTSFLoader:
         self.n_hosts = n_hosts
         self.hedge_after_s = hedge_after_s
         self.io = io or store.io
-        n_samples = store.shape_of(tensor_id)[0]
+        # pin the dataset version for the lifetime of this loader
+        self.ref = store.open(tensor_id)
+        n_samples = self.ref.shape[0]
         self.owned = np.arange(n_samples)[host_index::n_hosts]
         if len(self.owned) < batch_size:
             raise ValueError("fewer owned samples than batch size")
@@ -79,7 +84,7 @@ class FTSFLoader:
         parts.append((run_start, prev + 1))
 
         def read(a, b):
-            fn = lambda: self.store.get_slice(self.tid, [(int(a), int(b))])
+            fn = lambda: self.ref.read_slice([(int(a), int(b))])
             if self.hedge_after_s is not None:
                 return self.io.hedged(fn, hedge_after_s=self.hedge_after_s)
             return fn()

@@ -23,7 +23,6 @@ One place decides how every tensor lays out over the mesh:
 
 from __future__ import annotations
 
-import math
 from typing import Any, List, Optional, Sequence, Union
 
 import jax

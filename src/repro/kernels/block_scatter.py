@@ -14,7 +14,6 @@ bandwidth-optimal for a dense destination, no write hazards, no atomics.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

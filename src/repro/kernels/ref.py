@@ -7,7 +7,6 @@ the CPU fallback used by ops.py when not running on TPU hardware.
 
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax

@@ -3,13 +3,13 @@ from .object_store import (InMemoryObjectStore, LatencyModel, LocalFSObjectStore
 from .log import CommitConflict, DeltaLog, Snapshot
 from .io import (BlockCache, ReadExecutor, ReadStats, get_default_executor,
                  set_default_executor)
-from .table import DeltaTable
+from .table import DeltaTable, file_overlaps
 from . import columnar
 
 __all__ = [
     "InMemoryObjectStore", "LatencyModel", "LocalFSObjectStore", "ObjectStore",
     "ObjectNotFoundError", "PutIfAbsentError", "CommitConflict", "DeltaLog",
-    "Snapshot", "DeltaTable", "columnar",
+    "Snapshot", "DeltaTable", "file_overlaps", "columnar",
     "BlockCache", "ReadExecutor", "ReadStats", "get_default_executor",
     "set_default_executor",
 ]

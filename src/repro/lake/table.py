@@ -30,7 +30,8 @@ from .object_store import ObjectStore
 Filters = Dict[str, Tuple[Optional[float], Optional[float]]]
 
 
-def _file_overlaps(add: Dict[str, Any], filters: Optional[Filters]) -> bool:
+def file_overlaps(add: Dict[str, Any], filters: Optional[Filters]) -> bool:
+    """True unless the add-action's min/max stats prove no row can match."""
     if not filters:
         return True
     stats = add.get("stats", {}).get("column_stats", {})
@@ -165,10 +166,26 @@ class DeltaTable:
                 pv = add.get("partitionValues", {})
                 if any(pv.get(k) != v for k, v in partition_filters.items()):
                     continue
-            if not _file_overlaps(add, filters):
+            if not file_overlaps(add, filters):
                 continue
             plan.append(add)
         return plan
+
+    def fetch_adds(self, adds: Sequence[Dict[str, Any]],
+                   columns: Optional[Sequence[str]] = None, *,
+                   filters: Optional[Filters] = None) -> Iterator[Dict[str, Any]]:
+        """Phase 2 of a read: fetch an externally-built plan.
+
+        ``adds`` is any list of this table's add-actions (from
+        :meth:`plan_scan`, or an O(1) catalog lookup that avoided the full
+        snapshot walk). Files are fetched concurrently through the shared
+        executor; batches decode and yield in plan order, with ``filters``
+        applied row-wise exactly as :meth:`scan` would.
+        """
+        keys = [f"{self.path}/{add['path']}" for add in adds]
+        for data in self.io.fetch_ordered(self.store, keys):
+            batch = columnar.read_table(data, columns)
+            yield _apply_mask(batch, _row_mask(batch, filters))
 
     def scan(self, columns: Optional[Sequence[str]] = None, *,
              filters: Optional[Filters] = None,
@@ -188,10 +205,7 @@ class DeltaTable:
             for add in plan:
                 yield {"__path__": add["path"], "__size__": add["size"]}
             return
-        keys = [f"{self.path}/{add['path']}" for add in plan]
-        for data in self.io.fetch_ordered(self.store, keys):
-            batch = columnar.read_table(data, columns)
-            yield _apply_mask(batch, _row_mask(batch, filters))
+        yield from self.fetch_adds(plan, columns, filters=filters)
 
     def read_all(self, columns: Optional[Sequence[str]] = None, *,
                  filters: Optional[Filters] = None,

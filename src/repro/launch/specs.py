@@ -15,8 +15,7 @@ NamedShardings for every input. Skip rules (documented in DESIGN.md §5):
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

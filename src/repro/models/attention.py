@@ -10,7 +10,7 @@ config knobs (``attn_chunk_q/kv``) aligned to MXU shapes.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

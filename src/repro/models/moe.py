@@ -17,7 +17,7 @@ drops are rare. Top-k gate weights are renormalized over the kept experts.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ time (documented; it is 1/8 of xLSTM's layers).
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,6 @@ prefill/decode run the same structure.
 
 from __future__ import annotations
 
-import functools
-import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import queue
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,21 +37,16 @@ def save_weights(store: DeltaTensorStore, params: Any, *,
                  prefix: str = "serve_weights") -> List[str]:
     """Persist a param pytree: one FTSF tensor per leaf, one atomic commit.
 
-    Re-saving under the same prefix atomically replaces the previous
-    generation (old files are removed in the same commit — a reader never
-    sees two generations of one leaf).
+    One :class:`~repro.core.batch.WriteBatch` holds the whole generation;
+    re-saving under the same prefix atomically replaces the previous one
+    (old files are removed in the same commit — a reader never sees two
+    generations of one leaf).
     """
     leaves = jax.tree_util.tree_flatten_with_path(params)[0]
-    adds, tids = [], []
-    for path, leaf in leaves:
-        tid = f"{prefix}/{_leaf_name(path)}"
-        adds.extend(store.put_deferred(np.asarray(leaf), tensor_id=tid,
-                                       layout="ftsf"))
-        tids.append(tid)
-    wanted = set(tids)
-    removes = [a["path"] for a in store.table.files()
-               if a.get("partitionValues", {}).get("tensor") in wanted]
-    store.table.commit_adds(adds, removes=removes, op=f"SAVE WEIGHTS {prefix}")
+    with store.batch(op=f"SAVE WEIGHTS {prefix}") as batch:
+        tids = [batch.put(np.asarray(leaf), tensor_id=f"{prefix}/{_leaf_name(path)}",
+                          layout="ftsf", overwrite=True)
+                for path, leaf in leaves]
     return tids
 
 
@@ -61,19 +56,18 @@ def load_weights(store: DeltaTensorStore, template: Any, *,
     """Load a param pytree saved by :func:`save_weights`.
 
     ``template`` (e.g. ``jax.eval_shape`` of ``init_params``, or a real
-    params pytree) supplies the tree structure and leaf dtypes. All leaf
-    tensors are fetched in parallel on the shared executor.
+    params pytree) supplies the tree structure and leaf dtypes. Every leaf
+    is opened as a :class:`~repro.core.catalog.TensorRef` from ONE pinned
+    catalog (a consistent weight generation even if a re-save lands
+    mid-load) and resolved as parallel futures on the shared executor.
     """
     io = io or store.io
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    names = [_leaf_name(p) for p, _ in flat]
-
-    def fetch(name: str) -> np.ndarray:
-        return store.get(f"{prefix}/{name}")
-
-    arrays = io.map(fetch, names)
-    out = [arr.astype(np.dtype(leaf.dtype), copy=False)
-           for arr, (_, leaf) in zip(arrays, flat)]
+    catalog = store.catalog()
+    refs = [catalog.open(f"{prefix}/{_leaf_name(p)}") for p, _ in flat]
+    futures = [io.submit(ref.read) for ref in refs]
+    out = [f.result().astype(np.dtype(leaf.dtype), copy=False)
+           for f, (_, leaf) in zip(futures, flat)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

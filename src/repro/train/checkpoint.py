@@ -1,9 +1,12 @@
 """Distributed checkpointing on the Delta Tensor store.
 
 Every train-state leaf is stored as FTSF chunk rows in one delta table;
-a checkpoint step is ONE atomic commit (two-phase: upload all part files,
-then commit), so a crash mid-write leaves the previous checkpoint intact —
-the delta log's put-if-absent commit is the recovery line.
+a checkpoint step is ONE atomic :class:`~repro.core.batch.WriteBatch`
+commit (two-phase: upload all part files, then commit), so a crash
+mid-write leaves the previous checkpoint intact — the delta log's
+put-if-absent commit is the recovery line. Restores open every leaf as a
+:class:`~repro.core.catalog.TensorRef` from ONE catalog snapshot and
+resolve the reads as parallel futures.
 
 Features aimed at the 1000-node posture:
 * **incremental**: per-leaf content hashes; unchanged leaves are not
@@ -28,7 +31,6 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from ..core.encodings.base import normalize_slices
 from ..core.store import DeltaTensorStore
 from ..dist.sharding import _path_str
 from ..lake import ObjectStore
@@ -54,27 +56,29 @@ class DeltaCheckpointer:
     # -- save ---------------------------------------------------------------
 
     def _upload(self, step: int, leaves: List[Tuple[str, np.ndarray]]) -> None:
-        adds, manifest = [], {}
-        for name, arr in leaves:
-            digest = _leaf_hash(arr)
-            prev = self._last_hashes.get(name)
-            if prev is not None and prev[0] == digest:
-                manifest[name] = prev[1]           # unchanged: reuse chunks
-                continue
-            tid = f"{name}@{step}"
-            # two-phase: upload invisible files now, commit once at the end
-            groups = self.store.put_deferred(arr, tensor_id=tid, layout="ftsf",
-                                             chunk_dims=self.chunk_dims)
-            adds.extend(groups)
-            manifest[name] = tid
-            self._last_hashes[name] = (digest, tid)
-        manifest_blob = json.dumps(manifest, sort_keys=True).encode()
-        adds.append(self.store.table.append(
-            {"step": np.asarray([step], np.int64),
-             "manifest": [manifest_blob]},
-            commit=False,
-            partition_values={"kind": "ckpt_manifest"}))
-        self.store.table.commit_adds(adds, op=f"CHECKPOINT step={step}")
+        manifest: Dict[str, str] = {}
+        new_hashes: Dict[str, Tuple[str, str]] = {}
+        # one WriteBatch = the whole checkpoint: part files upload invisibly
+        # as they are staged, then land in a single atomic commit
+        with self.store.batch(op=f"CHECKPOINT step={step}") as batch:
+            for name, arr in leaves:
+                digest = _leaf_hash(arr)
+                prev = self._last_hashes.get(name)
+                if prev is not None and prev[0] == digest:
+                    manifest[name] = prev[1]       # unchanged: reuse chunks
+                    continue
+                tid = f"{name}@{step}"
+                batch.put(arr, tensor_id=tid, layout="ftsf",
+                          chunk_dims=self.chunk_dims)
+                manifest[name] = tid
+                new_hashes[name] = (digest, tid)
+            batch.add_rows(
+                {"step": np.asarray([step], np.int64),
+                 "manifest": [json.dumps(manifest, sort_keys=True).encode()]},
+                partition_values={"kind": "ckpt_manifest"})
+        # only a committed checkpoint may update the incremental-skip state;
+        # a failed batch must not make the next save skip an upload
+        self._last_hashes.update(new_hashes)
 
     def save(self, step: int, state: Any) -> None:
         leaves = [( _path_str(p), np.asarray(x))
@@ -134,16 +138,18 @@ class DeltaCheckpointer:
         """
         step_found, manifest = self._manifest(step)
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-        out = []
+        # every leaf ref comes from ONE catalog snapshot (consistent restore
+        # even under concurrent writers) and resolves as a parallel future
+        catalog = self.store.catalog()
+        futures = []
         for path, leaf in flat:
             name = _path_str(path)
-            tid = manifest[name]
-            if shard_slices and name in shard_slices:
-                arr = self.store.get_slice(tid, shard_slices[name])
-            else:
-                arr = self.store.get(tid)
-            want = np.dtype(leaf.dtype)
-            out.append(arr.astype(want, copy=False))
+            ref = catalog.open(manifest[name])
+            futures.append(ref.read_async(
+                shard_slices[name] if shard_slices and name in shard_slices
+                else None))
+        out = [f.result().astype(np.dtype(leaf.dtype), copy=False)
+               for f, (_, leaf) in zip(futures, flat)]
         return step_found, jax.tree_util.tree_unflatten(
             treedef, out)
 

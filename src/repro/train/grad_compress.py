@@ -20,12 +20,10 @@ bytes equal to k·block_bytes — measurable by the roofline harness.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ref as kref
 

@@ -1,0 +1,345 @@
+"""Handle API: Catalog, snapshot-pinned TensorRef, atomic WriteBatch."""
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchClosedError, DeltaTensorStore, SparseCOO,
+                        TensorRef, get_codec)
+from repro.lake import InMemoryObjectStore
+
+from .test_encodings import sparse_tensor
+
+LAYOUTS = ["ftsf", "coo", "csr", "csf", "bsgs"]
+
+
+class CountingStore(InMemoryObjectStore):
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.got_keys = []
+        self.list_calls = 0
+
+    def get(self, key):
+        self.got_keys.append(key)
+        return super().get(key)
+
+    def list(self, prefix=""):
+        self.list_calls += 1
+        return super().list(prefix)
+
+    def data_gets(self):
+        return [k for k in self.got_keys if "_delta_log" not in k]
+
+
+@pytest.fixture
+def store():
+    return DeltaTensorStore(InMemoryObjectStore(), "tensors")
+
+
+# ---------------------------------------------------------------------------
+# TensorRef: metadata, reads, numpy-style slicing
+# ---------------------------------------------------------------------------
+
+def test_ref_metadata_without_chunk_fetch():
+    obj = CountingStore()
+    store = DeltaTensorStore(obj, "t")
+    x = np.arange(6 * 8, dtype=np.float32).reshape(6, 8)
+    store.put(x, layout="ftsf", tensor_id="m", target_file_bytes=1 << 8)
+    store._headers_by_path.clear()           # drop the post-commit seed
+    obj.got_keys.clear()
+
+    ref = store.open("m")
+    assert obj.data_gets() == []             # opening fetches nothing
+    assert ref.shape == (6, 8)
+    assert ref.dtype == np.float32
+    assert ref.layout == "ftsf"
+    assert ref.nbytes > 0 and ref.n_chunk_files >= 2
+    assert len(obj.data_gets()) == 1         # metadata cost: the header file only
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_ref_read_and_slice_parity(store, layout):
+    x = sparse_tensor((12, 5, 6), density=0.15, seed=4)
+    tid = store.put(x, layout=layout, target_file_bytes=2 << 10)
+    ref = store.open(tid)
+    np.testing.assert_array_equal(ref.read(), x)
+    for spec in ([(3, 9)], [(0, 12), (2, 5)], [(11, 12)]):
+        np.testing.assert_array_equal(ref.read_slice(spec),
+                                      store.get_slice(tid, spec))
+
+
+def test_ref_getitem_numpy_semantics(store):
+    x = np.random.default_rng(3).standard_normal((7, 4, 5)).astype(np.float32)
+    store.put(x, layout="ftsf", tensor_id="g", target_file_bytes=1 << 9)
+    ref = store.open("g")
+    np.testing.assert_array_equal(ref[2:5], x[2:5])
+    np.testing.assert_array_equal(ref[3], x[3])
+    np.testing.assert_array_equal(ref[-1], x[-1])
+    np.testing.assert_array_equal(ref[1, 2], x[1, 2])
+    np.testing.assert_array_equal(ref[..., 1:3], x[..., 1:3])
+    np.testing.assert_array_equal(ref[2, ..., 4], x[2, ..., 4])
+    np.testing.assert_array_equal(ref[:, 1:3, :], x[:, 1:3, :])
+    np.testing.assert_array_equal(ref[...], x)
+    with pytest.raises(IndexError):
+        ref[1, 2, 3, 4]
+    with pytest.raises(IndexError):
+        ref[0:4:2]                            # strided slices unsupported
+    with pytest.raises(IndexError):
+        ref[99]
+
+
+def test_ref_read_coo(store):
+    x = sparse_tensor((9, 6, 4), density=0.1, seed=5)
+    for layout in ("coo", "csf", "ftsf"):     # native, native, dense-fallback
+        tid = store.put(x, layout=layout)
+        coo = store.open(tid).read_coo()
+        assert isinstance(coo, SparseCOO)
+        np.testing.assert_array_equal(coo.to_dense(), x)
+
+
+def test_read_async_matches_sync(store):
+    x = sparse_tensor((16, 6, 5), density=0.2, seed=6)
+    tid = store.put(x, layout="coo", target_file_bytes=2 << 10)
+    ref = store.open(tid)
+    futures = [ref.read_async(), ref.read_async([(4, 9)]), ref.read_coo_async()]
+    np.testing.assert_array_equal(futures[0].result(), x)
+    np.testing.assert_array_equal(futures[1].result(), x[4:9])
+    np.testing.assert_array_equal(futures[2].result().to_dense(), x)
+
+
+# ---------------------------------------------------------------------------
+# snapshot pinning + time travel
+# ---------------------------------------------------------------------------
+
+def test_ref_time_travel_after_overwrite(store):
+    x1 = np.arange(24, dtype=np.float32).reshape(4, 6)
+    x2 = x1 * 10
+    store.put(x1, layout="ftsf", tensor_id="t")
+    v0 = store.version()
+    store.put(x2, layout="ftsf", tensor_id="t", overwrite=True)
+    np.testing.assert_array_equal(store.open("t").read(), x2)
+    np.testing.assert_array_equal(store.open("t", version=v0).read(), x1)
+
+
+def test_refs_from_one_snapshot_agree_under_concurrent_writes():
+    obj = InMemoryObjectStore()
+    store = DeltaTensorStore(obj, "t")
+    writer = DeltaTensorStore(obj, "t")       # second client, same table
+    x1 = np.ones((4, 4), np.float32)
+    store.put(x1, layout="ftsf", tensor_id="w")
+
+    cat = store.catalog()
+    r1 = store.open("w")
+    writer.put(x1 * 5, layout="ftsf", tensor_id="w", overwrite=True)  # concurrent
+    r2 = cat.open("w")                        # same snapshot as r1
+    assert r1.version == r2.version == cat.version
+    np.testing.assert_array_equal(r1.read(), x1)
+    np.testing.assert_array_equal(r2.read(), x1)   # both pinned pre-overwrite
+    np.testing.assert_array_equal(store.open("w").read(), x1 * 5)  # unpinned
+
+
+def test_pinned_ref_survives_delete(store):
+    x = np.full((3, 3), 7.0, np.float32)
+    store.put(x, layout="ftsf", tensor_id="d")
+    ref = store.open("d")
+    store.delete("d")
+    with pytest.raises(KeyError):
+        store.open("d")
+    np.testing.assert_array_equal(ref.read(), x)   # old snapshot still readable
+
+
+# ---------------------------------------------------------------------------
+# WriteBatch: atomicity + header-cache hygiene
+# ---------------------------------------------------------------------------
+
+def test_batch_many_tensors_one_commit(store):
+    v0 = store.version()
+    with store.batch() as b:
+        for i in range(5):
+            b.put(np.full((4, 4), i, np.float32), layout="ftsf",
+                  tensor_id=f"t{i}")
+    assert b.version == v0 + 1                 # ONE commit for five tensors
+    assert store.version() == v0 + 1
+    assert [t for t, _ in store.list_tensors()] == [f"t{i}" for i in range(5)]
+    for i in range(5):
+        np.testing.assert_array_equal(store.open(f"t{i}").read(),
+                                      np.full((4, 4), i, np.float32))
+
+
+def test_batch_mixes_puts_overwrites_and_deletes(store):
+    store.put(np.ones((2, 2)), layout="ftsf", tensor_id="keep")
+    store.put(np.ones((2, 2)), layout="ftsf", tensor_id="kill")
+    store.put(np.ones((2, 2)), layout="ftsf", tensor_id="replace")
+    v = store.version()
+    with store.batch() as b:
+        b.put(np.zeros((3, 3)), layout="ftsf", tensor_id="new")
+        b.put(np.full((2, 2), 9.0), layout="ftsf", tensor_id="replace",
+              overwrite=True)
+        b.delete("kill")
+    assert store.version() == v + 1
+    assert [t for t, _ in store.list_tensors()] == ["keep", "new", "replace"]
+    np.testing.assert_array_equal(store.open("replace").read(),
+                                  np.full((2, 2), 9.0))
+    # the pre-batch state is one time-travel hop away
+    assert [t for t, _ in store.list_tensors(version=v)] == \
+        ["keep", "kill", "replace"]
+
+
+def test_batch_exception_abandons_everything(store):
+    store.put(np.ones((2, 2)), layout="ftsf", tensor_id="safe")
+    v = store.version()
+    with pytest.raises(RuntimeError, match="boom"):
+        with store.batch() as b:
+            b.put(np.zeros((4, 4)), layout="ftsf", tensor_id="phantom")
+            raise RuntimeError("boom")
+    assert store.version() == v                # no commit happened
+    with pytest.raises(KeyError):
+        store.open("phantom")
+    assert [t for t, _ in store.list_tensors()] == ["safe"]
+
+
+def test_abandoned_batch_leaves_no_stale_header(store):
+    """Regression: put_deferred used to cache headers before any commit."""
+    x1 = np.arange(12, dtype=np.float32).reshape(3, 4)
+    store.put(x1, layout="ftsf", tensor_id="h")
+    with pytest.raises(RuntimeError):
+        with store.batch() as b:               # different shape, same id
+            b.put(np.zeros((7, 7, 7), np.float32), layout="ftsf",
+                  tensor_id="h", overwrite=True)
+            raise RuntimeError("crash before commit")
+    ref = store.open("h")
+    assert ref.shape == (3, 4)                 # not the abandoned (7,7,7)
+    np.testing.assert_array_equal(ref.read(), x1)
+
+
+def test_put_deferred_alone_does_not_poison_reads(store):
+    x1 = np.ones((2, 5), np.float32)
+    store.put(x1, layout="ftsf", tensor_id="p")
+    store.put_deferred(np.zeros((9, 9), np.float32), tensor_id="p",
+                       layout="ftsf")         # uploaded, never committed
+    assert store.open("p").shape == (2, 5)
+    np.testing.assert_array_equal(store.get("p"), x1)
+
+
+def test_batch_duplicate_and_existing_ids(store):
+    store.put(np.ones((2, 2)), layout="ftsf", tensor_id="x")
+    with pytest.raises(ValueError, match="already exists"):
+        with store.batch() as b:
+            b.put(np.ones((2, 2)), layout="ftsf", tensor_id="x")
+    b = store.batch()
+    b.put(np.ones((2, 2)), layout="ftsf", tensor_id="y")
+    with pytest.raises(ValueError, match="staged twice"):
+        b.put(np.ones((2, 2)), layout="ftsf", tensor_id="y")
+    b.abandon()
+    with pytest.raises(KeyError):
+        store.batch().delete("nope")
+
+
+def test_rejected_put_uploads_nothing():
+    """A duplicate-id put must fail BEFORE paying any encode+upload."""
+    obj = InMemoryObjectStore()
+    store = DeltaTensorStore(obj, "t")
+    store.put(np.ones((2, 2)), layout="ftsf", tensor_id="x")
+    n_objects = len(list(obj.list("")))
+    with pytest.raises(ValueError, match="already exists"):
+        store.put(np.ones((64, 64)), layout="ftsf", tensor_id="x")
+    assert len(list(obj.list(""))) == n_objects   # no orphaned part files
+
+
+def test_batch_stages_against_pinned_base_snapshot():
+    """Overwrite removes resolve against the batch's base, not a racing write."""
+    obj = InMemoryObjectStore()
+    store = DeltaTensorStore(obj, "t")
+    racer = DeltaTensorStore(obj, "t")
+    store.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id="w")
+    b = store.batch()
+    b.put(np.full((2, 2), 2.0, np.float32), layout="ftsf", tensor_id="w",
+          overwrite=True)                        # pins the base here
+    # a concurrent writer lands between staging and commit
+    racer.put(np.full((2, 2), 9.0, np.float32), layout="ftsf", tensor_id="z")
+    b.commit()
+    np.testing.assert_array_equal(store.open("w").read(),
+                                  np.full((2, 2), 2.0, np.float32))
+    np.testing.assert_array_equal(store.open("z").read(),
+                                  np.full((2, 2), 9.0, np.float32))
+
+
+def test_batch_closed_after_commit(store):
+    b = store.batch()
+    b.put(np.ones((2, 2)), layout="ftsf", tensor_id="z")
+    assert b.commit() == store.version()
+    with pytest.raises(BatchClosedError):
+        b.put(np.ones((2, 2)), layout="ftsf", tensor_id="z2")
+    with pytest.raises(BatchClosedError):
+        b.commit()
+
+
+def test_empty_batch_commits_nothing(store):
+    v = store.version()
+    with store.batch():
+        pass
+    assert store.version() == v
+
+
+# ---------------------------------------------------------------------------
+# catalog: O(1) metadata per read
+# ---------------------------------------------------------------------------
+
+def test_repeated_reads_walk_snapshot_once():
+    obj = CountingStore()
+    store = DeltaTensorStore(obj, "t")
+    x = np.arange(8 * 16, dtype=np.float32).reshape(8, 16)
+    store.put(x, layout="ftsf", tensor_id="r", target_file_bytes=1 << 9)
+    v = store.version()
+    store.catalog_stats.update(builds=0, hits=0)
+
+    for _ in range(10):
+        np.testing.assert_array_equal(store.open("r", version=v).read(), x)
+    assert store.catalog_stats["builds"] == 1      # ONE O(files) walk
+    assert store.catalog_stats["hits"] == 9        # then O(1) lookups
+
+    # and metadata ops share the same catalog — no extra walks, no listing
+    lists_before = obj.list_calls
+    assert store.shape_of("r", version=v) == (8, 16)
+    assert store.tensor_bytes("r", version=v) > 0
+    assert ("r", "ftsf") in store.list_tensors(version=v)
+    assert store.catalog_stats["builds"] == 1
+    assert obj.list_calls == lists_before
+
+
+def test_catalog_inventory(store):
+    store.put(np.ones((2, 2)), layout="ftsf", tensor_id="a")
+    store.put(sparse_tensor((6, 6), density=0.1, seed=1), layout="coo",
+              tensor_id="b")
+    cat = store.catalog()
+    assert len(cat) == 2 and "a" in cat and "zzz" not in cat
+    assert list(cat) == ["a", "b"]
+    assert cat.tensors() == [("a", "ftsf"), ("b", "coo")]
+    assert cat.entry("a").layout == "ftsf"
+    assert isinstance(cat.open("a"), TensorRef)
+    with pytest.raises(KeyError):
+        cat.entry("zzz")
+
+
+# ---------------------------------------------------------------------------
+# codec capability flags
+# ---------------------------------------------------------------------------
+
+def test_codec_capability_flags():
+    assert get_codec("ftsf").supports_slice and not get_codec("ftsf").supports_coo
+    for layout in ("coo", "csr", "csc", "csf"):
+        assert get_codec(layout).supports_slice
+        assert get_codec(layout).supports_coo
+    assert not get_codec("bsgs").supports_coo  # dense round-trip, not native
+
+
+def test_unsupported_slice_raises_before_any_fetch(monkeypatch):
+    obj = CountingStore()
+    store = DeltaTensorStore(obj, "t")
+    x = np.arange(16, dtype=np.float32).reshape(4, 4)
+    store.put(x, layout="ftsf", tensor_id="s")
+    ref = store.open("s")
+    monkeypatch.setattr(type(get_codec("ftsf")), "supports_slice", False)
+    obj.got_keys.clear()
+    with pytest.raises(NotImplementedError, match="slice"):
+        ref.read_slice([(0, 2)])
+    assert obj.data_gets() == []               # raised before any chunk get

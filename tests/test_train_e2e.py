@@ -11,7 +11,7 @@ from repro.core import DeltaTensorStore
 from repro.data.pipeline import FTSFLoader, write_token_dataset
 from repro.data.synthetic import token_stream
 from repro.lake import InMemoryObjectStore
-from repro.models import get_arch, transformer
+from repro.models import get_arch
 from repro.train import checkpoint as ckpt_mod
 from repro.train import grad_compress, optimizer as opt, trainer
 
