@@ -1,0 +1,191 @@
+"""Shard scale-out: commit throughput vs shard count under concurrent writers.
+
+The single-table store serializes every writer on one delta log's
+put-if-absent race; ``DeltaTensorStore(shards=N)`` splits the logical store
+into N independent commit domains. This bench measures, on the paper's
+modeled object store (1 Gbps, 10 ms RTT, virtual clock):
+
+* **commit throughput** — W concurrent writer threads (1/4/8), each landing
+  batches of tensors through the fenced commit-retry/rebase loop, against
+  stores with 1/4/8 shards. Writers on one shard conflict and pay rebase
+  round-trips; writers spread over N shards mostly don't. Expected shape:
+  >= 2x throughput at 4 shards vs 1 shard under 8 writers, and **zero lost
+  writes** in every configuration (all conflicts resolved by retry/rebase);
+* **conflict/retry counts** — how many CommitConflicts the rebase loop
+  absorbed per configuration (the cost the sharding removes);
+* **cross-shard read makespan** — a cold reader fanning one pinned
+  version-vector catalog + all tensor reads out on the shared executor,
+  showing reads stay flat as the shard count grows.
+
+With ``--json`` (or :func:`run`'s ``json_path``) results land in
+``BENCH_shard_scale.json`` so ``check_regression.py`` can gate PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+
+from repro.configs.paper_store import PAPER_STORE
+from repro.core import DeltaTensorStore
+from repro.lake import InMemoryObjectStore, LatencyModel, ReadExecutor
+
+from .common import row
+
+SHARD_COUNTS = (1, 4, 8)
+WRITER_COUNTS = (1, 4, 8)
+COMMITS_PER_WRITER = 6
+TENSORS_PER_COMMIT = 1         # 1 tensor/commit => each commit hits 1 shard
+TENSOR_SHAPE = (8, 8)          # tiny payloads: the commit race dominates
+COMMIT_RETRIES = 64            # generous bound — zero lost writes required
+READ_TENSORS = 16
+READ_SHAPE = (64, 64)
+
+
+def _modeled_store(channels: int):
+    lm = LatencyModel(rtt_s=PAPER_STORE["object_store"]["rtt_s"],
+                      bandwidth_bps=PAPER_STORE["object_store"]["bandwidth_bps"],
+                      virtual_clock=True, parallelism=max(channels, 8),
+                      occupancy_scale=0.02)
+    return InMemoryObjectStore(latency=lm), lm
+
+
+def _write_workload(shards: int, writers: int):
+    obj, lm = _modeled_store(channels=writers)
+    io = ReadExecutor(max_workers=8, cache_bytes=0)
+    try:
+        DeltaTensorStore(obj, "tensors", io=io, shards=shards)  # create once
+        # one client per writer thread, as real concurrent writers would be
+        clients = [DeltaTensorStore(obj, "tensors", io=io)
+                   for _ in range(writers)]
+        start = threading.Barrier(writers + 1)
+        errors = []
+
+        def run_writer(wid: int, client: DeltaTensorStore):
+            try:
+                start.wait(timeout=60)
+                for k in range(COMMITS_PER_WRITER):
+                    with client.batch(commit_retries=COMMIT_RETRIES) as b:
+                        for j in range(TENSORS_PER_COMMIT):
+                            b.put(np.full(TENSOR_SHAPE, float(wid), np.float32),
+                                  layout="ftsf",
+                                  tensor_id=f"w{wid}-c{k}-t{j}")
+            except BaseException as e:  # a lost write — reported below
+                errors.append((wid, repr(e)))
+
+        threads = [threading.Thread(target=run_writer, args=(w, c))
+                   for w, c in enumerate(clients)]
+        for t in threads:
+            t.start()
+        lm.reset()                      # measure the write traffic only
+        start.wait(timeout=60)
+        for t in threads:
+            t.join(timeout=600)
+        elapsed, requests = lm.elapsed_s, lm.requests
+
+        # zero-lost-writes audit: every staged tensor must be readable with
+        # its writer's value through a fresh client
+        reader = DeltaTensorStore(obj, "tensors", io=io)
+        lost = len(errors)
+        for wid in range(writers):
+            for k in range(COMMITS_PER_WRITER):
+                for j in range(TENSORS_PER_COMMIT):
+                    try:
+                        got = reader.open(f"w{wid}-c{k}-t{j}").read()
+                        if not np.array_equal(
+                                got, np.full(TENSOR_SHAPE, float(wid),
+                                             np.float32)):
+                            lost += 1
+                    except KeyError:
+                        lost += 1
+
+        batches = writers * COMMITS_PER_WRITER
+        return {
+            "batch_commits": batches,
+            "shard_commits": sum(c.commit_stats["commits"] for c in clients),
+            "conflicts": sum(c.commit_stats["conflicts"] for c in clients),
+            "retries": sum(c.commit_stats["retries"] for c in clients),
+            "elapsed_s": elapsed,
+            "requests": requests,
+            "throughput_cps": batches / elapsed if elapsed > 0 else float("inf"),
+            "lost_writes": lost,
+        }
+    finally:
+        io.shutdown()
+
+
+def _read_workload(shards: int):
+    obj, lm = _modeled_store(channels=8)
+    io = ReadExecutor(max_workers=8, cache_bytes=0)
+    try:
+        store = DeltaTensorStore(obj, "tensors", io=io, shards=shards)
+        rng = np.random.default_rng(0)
+        with store.batch() as b:
+            for i in range(READ_TENSORS):
+                b.put(rng.standard_normal(READ_SHAPE).astype(np.float32),
+                      layout="ftsf", tensor_id=f"r{i}")
+        # cold reader: fresh client, empty block cache — pays the full
+        # cross-shard snapshot + fetch fan-out
+        reader = DeltaTensorStore(obj, "tensors",
+                                  io=ReadExecutor(max_workers=8,
+                                                  cache_bytes=0))
+        lm.reset()
+        cat = reader.catalog()
+        futures = [cat.open(f"r{i}").read_async() for i in range(READ_TENSORS)]
+        for f in futures:
+            f.result()
+        return {"tensors": READ_TENSORS, "makespan_s": lm.elapsed_s,
+                "requests": lm.requests}
+    finally:
+        io.shutdown()
+
+
+def run(json_path=None):
+    lines = []
+    results = {"bench": "shard_scale", "commits_per_writer": COMMITS_PER_WRITER,
+               "tensors_per_commit": TENSORS_PER_COMMIT,
+               "writers": {}, "read": {}, "throughput_ratio_vs_1shard_w8": {}}
+
+    for writers in WRITER_COUNTS:
+        per_shards = {}
+        for shards in SHARD_COUNTS:
+            r = _write_workload(shards, writers)
+            per_shards[str(shards)] = r
+            lines.append(row(
+                f"shard_scale_commit_s{shards}_w{writers}",
+                r["elapsed_s"] * 1e6 / max(r["batch_commits"], 1),
+                f"throughput={r['throughput_cps']:.2f}cps "
+                f"conflicts={r['conflicts']} retries={r['retries']} "
+                f"lost={r['lost_writes']}"))
+        results["writers"][str(writers)] = per_shards
+
+    w8 = results["writers"].get("8", {})
+    if "1" in w8:
+        base = w8["1"]["throughput_cps"]
+        for shards, r in sorted(w8.items(), key=lambda kv: int(kv[0])):
+            if shards == "1":
+                continue
+            ratio = r["throughput_cps"] / base
+            results["throughput_ratio_vs_1shard_w8"][shards] = ratio
+            lines.append(row(f"shard_scale_speedup_s{shards}_w8", 0.0,
+                             f"throughput={ratio:.2f}x_vs_1shard"))
+
+    for shards in SHARD_COUNTS:
+        r = _read_workload(shards)
+        results["read"][str(shards)] = r
+        lines.append(row(f"shard_scale_read_s{shards}",
+                         r["makespan_s"] * 1e6,
+                         f"tensors={r['tensors']} requests={r['requests']}"))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(json_path="BENCH_shard_scale.json"):
+        print(line)

@@ -1,0 +1,84 @@
+"""Bench-regression gate: fresh BENCH_*.json vs the committed baselines.
+
+CI's ``bench-smoke`` job re-runs the virtual-clock benchmarks and calls
+
+    python benchmarks/check_regression.py --fresh bench_out --baseline .
+
+which fails (exit 1) when a gated metric regresses more than ``--tolerance``
+(default 20%) below its committed baseline, or when any shard-scale
+configuration lost a write. Gated metrics:
+
+* ``BENCH_read_path.json``  — width-8 parallel ``get`` speedup over serial;
+* ``BENCH_shard_scale.json`` — 4-shard commit-throughput ratio vs 1 shard
+  under 8 concurrent writers (the sharding scale-out claim), plus the
+  zero-lost-writes invariant across every writer/shard configuration.
+
+Improvements never fail the gate; commit a refreshed baseline JSON when a
+PR deliberately moves a metric.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_TOLERANCE = 0.20
+
+GATES = [
+    ("BENCH_read_path.json", "width-8 get speedup",
+     lambda d: float(d["speedup"]["8"]["get"])),
+    ("BENCH_shard_scale.json", "4-shard/1-shard commit throughput @ 8 writers",
+     lambda d: float(d["throughput_ratio_vs_1shard_w8"]["4"])),
+]
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="bench_out",
+                    help="dir holding freshly generated BENCH_*.json")
+    ap.add_argument("--baseline", default=".",
+                    help="dir holding the committed baseline BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for fname, label, metric in GATES:
+        fresh = _load(os.path.join(args.fresh, fname))
+        base = _load(os.path.join(args.baseline, fname))
+        got, want = metric(fresh), metric(base)
+        floor = want * (1.0 - args.tolerance)
+        verdict = "OK" if got >= floor else "REGRESSION"
+        print(f"[{verdict}] {label}: fresh={got:.3f} baseline={want:.3f} "
+              f"floor={floor:.3f}")
+        if got < floor:
+            failures.append(label)
+
+    shard = _load(os.path.join(args.fresh, "BENCH_shard_scale.json"))
+    for writers, per_shards in sorted(shard["writers"].items()):
+        for shards, r in sorted(per_shards.items()):
+            lost = int(r.get("lost_writes", 0))
+            if lost:
+                print(f"[REGRESSION] lost writes: {lost} "
+                      f"(shards={shards}, writers={writers})")
+                failures.append(f"lost_writes s{shards} w{writers}")
+    if not failures:
+        print("[OK] zero lost writes in every shard/writer configuration")
+
+    if failures:
+        print(f"FAIL: {len(failures)} gate(s) regressed: "
+              + "; ".join(failures), file=sys.stderr)
+        return 1
+    print("PASS: all bench gates within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,9 +9,11 @@ from .encodings import ftsf, coo, csr, csf, bsgs  # noqa: F401 (register codecs)
 from .sparsity import SPARSE_THRESHOLD, choose_layout, density
 from .catalog import Catalog, TensorEntry, TensorRef
 from .batch import BatchClosedError, WriteBatch
+from .sharding import ShardRouter, VersionVector, load_manifest
 from .store import DeltaTensorStore
 
 __all__ = ["Codec", "SparseCOO", "get_codec", "normalize_slices",
            "SPARSE_THRESHOLD", "choose_layout", "density", "DeltaTensorStore",
            "Catalog", "TensorEntry", "TensorRef", "WriteBatch",
-           "BatchClosedError"]
+           "BatchClosedError", "ShardRouter", "VersionVector",
+           "load_manifest"]

@@ -1,4 +1,4 @@
-"""WriteBatch — stage many tensor writes/deletes, land ONE atomic commit.
+"""WriteBatch — stage many tensor writes/deletes, land atomic commits.
 
 Replaces the ad-hoc two-phase code that each writer (checkpointer, serve
 weight saver) used to hand-roll over ``put_deferred`` + ``commit_adds``:
@@ -6,53 +6,100 @@ weight saver) used to hand-roll over ``put_deferred`` + ``commit_adds``:
     with store.batch(op="CHECKPOINT step=7") as b:
         for name, arr in leaves:
             b.put(arr, tensor_id=f"{name}@7", layout="ftsf")
-    print(b.version)          # the one committed table version
+    print(b.version)          # the committed version (vector if sharded)
 
 Part files are uploaded as they are staged (invisible until the commit);
 ``__exit__`` commits everything — puts, overwrites, deletes, raw rows — as
-one delta-log action list, so readers observe either all of the batch or
-none of it. An exception inside the ``with`` block abandons the batch:
-uploaded files stay invisible to every snapshot (vacuum reclaims them) and
-**no header is cached**, which is the fix for the old put_deferred
-staleness bug where a failed batched commit left a poisoned header cache.
+one delta-log action list **per shard**, so readers observe either all of a
+shard's slice of the batch or none of it. On an unsharded store that is
+exactly one atomic commit, as before. An exception inside the ``with``
+block abandons the batch: uploaded files stay invisible to every snapshot
+(vacuum reclaims them) and **no header is cached**, which is the fix for
+the old put_deferred staleness bug where a failed batched commit left a
+poisoned header cache.
+
+**Commit-retry/rebase** (the ROADMAP follow-on): every per-shard commit is
+fenced with ``expected_version`` = the batch's base snapshot for that
+shard. When a concurrent writer lands first, the fence raises
+:class:`~repro.lake.log.CommitConflict`; the batch then *rebases* — it
+re-snapshots the conflicted shard, re-validates that no tensor staged here
+was concurrently modified (same staged files present/absent as at the
+base), and re-commits against the new version — up to ``commit_retries``
+times. Disjoint-tensor writers therefore all succeed; a genuine
+same-tensor overlap is non-rebasable and raises ``CommitConflict``
+immediately (retrying cannot make two overwrites of one tensor commute).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, TYPE_CHECKING
+from typing import Any, Dict, List, Optional, Tuple, Union, TYPE_CHECKING
+
+from ..lake.log import CommitConflict, Snapshot
+from ..lake.table import DeltaTable
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .store import DeltaTensorStore
+
+DEFAULT_COMMIT_RETRIES = 10
 
 
 class BatchClosedError(RuntimeError):
     pass
 
 
-class WriteBatch:
-    """Stages puts/deletes against one base snapshot; commits atomically.
+def _tensor_paths(snapshot: Snapshot) -> Dict[str, List[str]]:
+    """tid -> sorted live file paths in one shard snapshot."""
+    out: Dict[str, List[str]] = {}
+    for add in snapshot.add_actions():
+        tid = (add.get("partitionValues") or {}).get("tensor")
+        if tid is not None:
+            out.setdefault(tid, []).append(add["path"])
+    return {tid: sorted(paths) for tid, paths in out.items()}
 
-    The base catalog is pinned at the first staging call: every
-    existence/overwrite/delete lookup in this batch resolves against that
-    one snapshot, so what a batch removes does not shift under a
-    concurrent writer. (The final commit itself is the delta log's
-    optimistic append — a racing commit between pin and land can still
-    interleave; serializable writers should fence with
-    ``table.commit_adds(..., expected_version=...)`` semantics instead.)
+
+class WriteBatch:
+    """Stages puts/deletes against per-shard base snapshots; commits per shard.
+
+    A shard's base snapshot is pinned the first time the batch touches that
+    shard: every existence/overwrite/delete lookup resolves against it, so
+    what a batch removes does not shift under a concurrent writer. Shards
+    the batch never touches are never probed — on a sharded store a
+    single-tensor put costs one shard's snapshot, not N. At commit time
+    each touched shard lands one atomic commit fenced against its base,
+    with the bounded rebase loop above resolving append-only races.
+
+    Cross-shard note: per-shard commits are each atomic, but a batch that
+    spans several shards is not a single cross-shard transaction — a reader
+    sampling mid-commit can see some shards' slices landed and others not.
+    Pin a version vector (``store.catalog()``) for a consistent view.
     """
 
-    def __init__(self, store: "DeltaTensorStore", *, op: str = "WRITE BATCH"):
+    def __init__(self, store: "DeltaTensorStore", *, op: str = "WRITE BATCH",
+                 commit_retries: Optional[int] = None):
         self._store = store
         self.op = op
-        self._adds: List[Dict[str, Any]] = []
-        self._removes: List[str] = []
+        self.commit_retries = (DEFAULT_COMMIT_RETRIES if commit_retries is None
+                               else max(0, int(commit_retries)))
+        # staged operations, in order: each is a dict with
+        #   kind: "put" | "delete" | "rows"
+        #   shard: destination shard index
+        #   tid:   tensor id ("put"/"delete" only; None for raw rows)
+        #   adds:  add-actions uploaded for this op
+        #   removes: file paths this op removes (resolved at the base)
+        self._ops: List[Dict[str, Any]] = []
         # header seeds applied to the store's by-path cache ONLY on a
         # successful commit (never for an abandoned batch)
         self._header_seeds: List[tuple] = []
         self._staged_tids: List[str] = []
-        self._base = None  # catalog pinned at first staging call
+        # per-shard base pins: shard -> (base version, tid -> live paths)
+        self._base_versions: Dict[int, int] = {}
+        self._base_paths: Dict[int, Dict[str, List[str]]] = {}
         self._closed = False
-        self.version: Optional[int] = None  # set by commit()
+        # committed version: int on 1-shard stores, version vector tuple on
+        # sharded stores (resolved lazily); detail in `shard_versions`
+        self._version: Union[None, int, Tuple[int, ...]] = None
+        self.shard_versions: Dict[int, int] = {}  # shard -> committed version
+        self.conflicts = 0  # CommitConflicts this batch hit (and rebased)
 
     # -- staging ---------------------------------------------------------------
 
@@ -74,11 +121,11 @@ class WriteBatch:
         if existing and not overwrite:
             raise ValueError(
                 f"tensor {tid!r} already exists (use overwrite=True)")
-        adds, header_seed = self._store._encode_and_upload(
+        shard, adds, header_seed = self._store._encode_and_upload(
             tensor, layout=layout, tensor_id=tid,
             target_file_bytes=target_file_bytes, **codec_params)
-        self._removes.extend(existing)
-        self._adds.extend(adds)
+        self._ops.append({"kind": "put", "shard": shard, "tid": tid,
+                          "adds": adds, "removes": sorted(existing)})
         if header_seed is not None:
             self._header_seeds.append(header_seed)
         self._staged_tids.append(tid)
@@ -90,19 +137,37 @@ class WriteBatch:
         paths = self._existing_paths(tid)
         if not paths and not missing_ok:
             raise KeyError(f"tensor {tid!r} not found")
-        self._removes.extend(paths)
+        if paths:
+            self._ops.append({"kind": "delete",
+                              "shard": self._store.router.shard_of(tid),
+                              "tid": tid, "adds": [],
+                              "removes": sorted(paths)})
 
     def add_rows(self, columns: Dict[str, Any], *,
                  partition_values: Optional[Dict[str, str]] = None) -> None:
-        """Stage one raw table file (e.g. a checkpoint manifest row)."""
+        """Stage one raw table file (e.g. a checkpoint manifest row).
+
+        Raw rows have no tensor id, so they always land on shard 0 (the
+        meta shard) and are pure adds — a conflict on them is always
+        rebasable by re-committing as-is.
+        """
         self._check_open()
-        self._adds.append(self._store.table.append(
-            columns, commit=False, partition_values=partition_values or {}))
+        add = self._store.tables[0].append(
+            columns, commit=False, partition_values=partition_values or {})
+        self._ops.append({"kind": "rows", "shard": 0, "tid": None,
+                          "adds": [add], "removes": []})
+
+    def _pin_shard(self, shard: int) -> None:
+        """Pin this shard's base snapshot on first touch (then reuse it)."""
+        if shard not in self._base_versions:
+            snap = self._store.tables[shard].snapshot()
+            self._base_versions[shard] = snap.version
+            self._base_paths[shard] = _tensor_paths(snap)
 
     def _existing_paths(self, tid: str) -> List[str]:
-        if self._base is None:
-            self._base = self._store.catalog()   # pin the base snapshot
-        return self._base.entry(tid).paths if tid in self._base else []
+        shard = self._store.router.shard_of(tid)
+        self._pin_shard(shard)
+        return self._base_paths[shard].get(tid, [])
 
     # -- terminal states -------------------------------------------------------
 
@@ -110,20 +175,96 @@ class WriteBatch:
     def staged(self) -> List[str]:
         return list(self._staged_tids)
 
-    def commit(self) -> int:
-        """Land every staged action in one atomic delta commit."""
+    @property
+    def version(self) -> Union[None, int, Tuple[int, ...]]:
+        """Committed version: int (1-shard) or a version vector (sharded).
+
+        On a sharded store the vector covers ALL shards — committed shards
+        at their new versions, untouched shards probed lazily on first
+        access (so batches that never read ``version`` never pay for it).
+        The vector is a valid logical pin observed just after the commit.
+        """
+        if self._version is None and self._closed and self.shard_versions \
+                and self._store.shards > 1:
+            vv = list(self._store.version_vector())
+            for s, v in self.shard_versions.items():
+                vv[s] = max(vv[s], v)
+            self._version = tuple(vv)
+        return self._version
+
+    def _rebase(self, table: DeltaTable, ops: List[Dict[str, Any]]) -> int:
+        """Re-snapshot one conflicted shard and re-validate the staged ops.
+
+        Rebasable = every tensor this batch touches is byte-identical to
+        the base in the fresh snapshot (same live files for overwrites and
+        deletes, still absent for fresh puts) — then the staged add/remove
+        actions still mean the same thing and can simply re-commit on top.
+        Anything else is a genuine same-tensor overlap: raise.
+        """
+        snap = table.snapshot()
+        live = _tensor_paths(snap)
+        for op in ops:
+            tid = op["tid"]
+            if tid is None:
+                continue  # raw rows: pure adds, nothing to re-validate
+            if live.get(tid, []) != op["removes"]:
+                raise CommitConflict(
+                    f"tensor {tid!r} was concurrently modified; batch "
+                    f"cannot be rebased", found=snap.version)
+        return snap.version
+
+    def commit(self) -> Union[None, int, Tuple[int, ...]]:
+        """Land every staged action, one fenced atomic commit per shard.
+
+        Returns the committed version on 1-shard stores. On sharded stores
+        it returns None — read ``batch.version`` (lazy) or
+        ``batch.shard_versions`` (free) instead; resolving the full vector
+        eagerly here would probe every shard log on every commit.
+        """
         self._check_open()
         self._closed = True
-        if not self._adds and not self._removes:
-            self.version = self._store.table.version()
-            return self.version
-        self.version = self._store.table.commit_adds(
-            self._adds, removes=self._removes, op=self.op)
+        if not self._ops:
+            self._version = self._store.version()
+            return self._version
+
+        per_shard: Dict[int, List[Dict[str, Any]]] = {}
+        for op in self._ops:
+            per_shard.setdefault(op["shard"], []).append(op)
+
+        stats = self._store.commit_stats
+        for shard in sorted(per_shard):
+            ops = per_shard[shard]
+            adds = [a for op in ops for a in op["adds"]]
+            removes = [p for op in ops for p in op["removes"]]
+            table = self._store.tables[shard]
+            self._pin_shard(shard)       # rows-only shards pin here
+            expected = self._base_versions[shard]
+            attempts = 0
+            while True:
+                try:
+                    v = table.commit_adds(adds, removes=removes, op=self.op,
+                                          expected_version=expected)
+                    stats["commits"] += 1
+                    self.shard_versions[shard] = v
+                    break
+                except CommitConflict:
+                    stats["conflicts"] += 1
+                    self.conflicts += 1
+                    attempts += 1
+                    if attempts > self.commit_retries:
+                        raise
+                    # rebase: raises CommitConflict itself on real overlap
+                    expected = self._rebase(table, ops)
+                    stats["retries"] += 1
+
+        if self._store.shards == 1:
+            self._version = self.shard_versions[0]
+        # sharded: the full vector resolves lazily in the `version` property
         # headers become cacheable only now: the data is visible and the
         # header file path is immutable, so this can never go stale
         for path, cols in self._header_seeds:
             self._store._seed_header(path, cols)
-        return self.version
+        return self._version
 
     def abandon(self) -> None:
         """Drop the batch; uploaded part files remain invisible."""

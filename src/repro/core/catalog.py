@@ -16,6 +16,13 @@ operation, and ``read_async`` fans the chunk fetches out on the shared
 :class:`~repro.lake.io.ReadExecutor` work pool. Refs opened from one
 catalog are snapshot-consistent with each other by construction — the Deep
 Lake / NeurStore "view over a pinned commit" model.
+
+On a **sharded** store the catalog is the merged cross-shard index: it is
+built from one snapshot per shard table and pinned to the resulting
+*version vector* (``catalog.version == (v0, v1, ...)``). Each entry
+remembers its shard, so refs route fetches to the right shard table while
+consumers see one flat tensor namespace. One logical snapshot = one tuple
+of shard versions; there is no single total order across shards.
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ from __future__ import annotations
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import (TYPE_CHECKING, Any, Dict, Iterator, List, Optional,
-                    Sequence, Tuple)
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -38,10 +45,11 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle is typing-only
 
 @dataclass
 class TensorEntry:
-    """One tensor's add-actions inside a single snapshot."""
+    """One tensor's add-actions inside a single (shard) snapshot."""
 
     tensor_id: str
     layout: str
+    shard: int = 0
     header_adds: List[Dict[str, Any]] = field(default_factory=list)
     chunk_adds: List[Dict[str, Any]] = field(default_factory=list)
 
@@ -56,37 +64,62 @@ class TensorEntry:
 
 
 class Catalog:
-    """Immutable tensor index over one table snapshot.
+    """Immutable tensor index over one logical snapshot (1+ shard snapshots).
 
-    Built in one O(files) pass; every lookup afterwards is O(1). The store
-    caches catalogs per version (snapshots never change), so a read burst
-    pays the walk once, not once per read.
+    Built in one O(files) pass per shard; every lookup afterwards is O(1).
+    The store caches catalogs per version vector (snapshots never change),
+    so a read burst pays the walk once, not once per read. On a sharded
+    store the per-shard indexes merge into one flat namespace — the stable
+    router guarantees a tensor lives in exactly one shard, so the merge is
+    collision-free by construction.
     """
 
-    def __init__(self, store: "DeltaTensorStore", snapshot: Snapshot):
+    def __init__(self, store: "DeltaTensorStore",
+                 snapshots: Union[Snapshot, Sequence[Snapshot]]):
         self._store = store
-        self._snapshot = snapshot
+        if isinstance(snapshots, Snapshot):
+            snapshots = [snapshots]
+        self._snapshots: Tuple[Snapshot, ...] = tuple(snapshots)
         self._entries: Dict[str, TensorEntry] = {}
         self._headers: Dict[str, Dict[str, Any]] = {}  # tid -> parsed header
-        for add in snapshot.add_actions():
-            pv = add.get("partitionValues", {}) or {}
-            tid = pv.get("tensor")
-            if tid is None:
-                continue  # non-tensor rows (e.g. checkpoint manifests)
-            entry = self._entries.get(tid)
-            if entry is None:
-                entry = self._entries[tid] = TensorEntry(
-                    tensor_id=tid, layout=pv.get("layout", "?"))
-            if pv.get("kind") == "header":
-                entry.header_adds.append(add)
-            else:
-                entry.chunk_adds.append(add)
+        for shard, snapshot in enumerate(self._snapshots):
+            for add in snapshot.add_actions():
+                pv = add.get("partitionValues", {}) or {}
+                tid = pv.get("tensor")
+                if tid is None:
+                    continue  # non-tensor rows (e.g. checkpoint manifests)
+                entry = self._entries.get(tid)
+                if entry is None:
+                    entry = self._entries[tid] = TensorEntry(
+                        tensor_id=tid, layout=pv.get("layout", "?"),
+                        shard=shard)
+                if pv.get("kind") == "header":
+                    entry.header_adds.append(add)
+                else:
+                    entry.chunk_adds.append(add)
 
     # -- inventory -----------------------------------------------------------
 
     @property
-    def version(self) -> int:
-        return self._snapshot.version
+    def version(self) -> Union[int, Tuple[int, ...]]:
+        """Pinned version: an int on 1-shard stores (the pre-sharding API),
+        a per-shard version vector tuple on sharded stores."""
+        if len(self._snapshots) == 1:
+            return self._snapshots[0].version
+        return self.version_vector
+
+    @property
+    def version_vector(self) -> Tuple[int, ...]:
+        """Per-shard pinned versions (1-tuple on unsharded stores)."""
+        return tuple(s.version for s in self._snapshots)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._snapshots)
+
+    def table_for(self, shard: int):
+        """The shard's :class:`~repro.lake.table.DeltaTable`."""
+        return self._store.tables[shard]
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -123,7 +156,7 @@ class Catalog:
         if not entry.header_adds:
             raise KeyError(f"tensor {tid!r}: no header at v{self.version}")
         add = entry.header_adds[0]
-        cols = self._store._header_for_path(add["path"])
+        cols = self._store._header_for_path(add["path"], shard=entry.shard)
         self._headers[tid] = cols
         return cols
 
@@ -166,8 +199,13 @@ class TensorRef:
         return self._entry.layout
 
     @property
-    def version(self) -> int:
-        """Table version this ref is pinned to."""
+    def shard(self) -> int:
+        """Shard table this tensor's files live in (0 on unsharded stores)."""
+        return self._entry.shard
+
+    @property
+    def version(self) -> Union[int, Tuple[int, ...]]:
+        """Pinned version: table version, or the version vector if sharded."""
         return self._catalog.version
 
     @property
@@ -207,7 +245,7 @@ class TensorRef:
 
     def _groups(self, filters: Optional[Filters] = None) -> List[Dict[str, Any]]:
         """Header + surviving chunk batches, fetched concurrently."""
-        table = self._catalog._store.table
+        table = self._catalog.table_for(self._entry.shard)
         adds = [a for a in self._entry.chunk_adds if file_overlaps(a, filters)]
         groups: List[Dict[str, Any]] = [self.header]
         groups.extend(table.fetch_adds(adds, filters=filters))

@@ -20,20 +20,33 @@ Writes batch through :class:`~repro.core.batch.WriteBatch`
 (``with store.batch() as b: b.put(...)``): many tensors plus deletes land
 in ONE atomic commit, and headers are cached only after that commit
 succeeds (an abandoned batch leaves no stale state behind).
+
+**Write scale-out**: ``DeltaTensorStore(obj, root, shards=N)`` splits the
+logical store across N shard tables, each with its own delta log — an
+independent commit domain, so concurrent writers whose tensors hash to
+different shards never race each other's commits (see
+``repro.core.sharding``). Reads are transparent: the catalog merges all
+shards into one namespace pinned to a per-shard *version vector*, and
+refs route fetches to the right shard table. ``shards=1`` (the default)
+keeps the exact pre-sharding byte layout: the table lives at ``root``
+with no manifest, so every existing table opens unchanged.
 """
 
 from __future__ import annotations
 
 import uuid
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..lake import DeltaTable, ObjectStore, ReadExecutor, columnar
+from ..lake.io import get_default_executor
 from .batch import WriteBatch
 from .catalog import Catalog, TensorRef
 from .encodings.base import SparseCOO, get_codec
+from .sharding import (ROUTER_ALGO, ShardRouter, load_or_init_manifest,
+                       resolve_version_vector, shard_table_path)
 from .sparsity import choose_layout
 
 TARGET_FILE_BYTES = 4 << 20
@@ -68,52 +81,104 @@ def _slice_columns(columns: Dict[str, Any], lo: int, hi: int) -> Dict[str, Any]:
     return out
 
 
+VersionArg = Union[None, int, Sequence[int]]
+
+
 class DeltaTensorStore:
     def __init__(self, object_store: ObjectStore, root: str = "tensor_store",
-                 io: Optional[ReadExecutor] = None):
-        self.table = DeltaTable.create(object_store, root, io=io)
-        # per-version catalogs: snapshots are immutable, so a catalog never
-        # goes stale; LRU-capped for long-lived many-version clients
-        self._catalogs: "OrderedDict[int, Catalog]" = OrderedDict()
+                 io: Optional[ReadExecutor] = None,
+                 shards: Optional[int] = None):
+        root = root.rstrip("/")
+        self.root = root
+        manifest = load_or_init_manifest(object_store, root, shards)
+        self.shards: int = int(manifest["shards"])
+        self.router = ShardRouter(self.shards,
+                                  manifest.get("router", ROUTER_ALGO))
+        io = io or get_default_executor()
+        if self.shards == 1:
+            # unsharded: table at root itself — the pre-sharding layout
+            self.tables: List[DeltaTable] = [
+                DeltaTable.create(object_store, root, io=io)]
+        else:
+            self.tables = [
+                DeltaTable.create(object_store, shard_table_path(root, i),
+                                  io=io)
+                for i in range(self.shards)]
+        # per-version-vector catalogs: snapshots are immutable, so a catalog
+        # never goes stale; LRU-capped for long-lived many-version clients
+        self._catalogs: "OrderedDict[Tuple[int, ...], Catalog]" = OrderedDict()
         # parsed headers keyed by immutable data-file path (seeded on
-        # successful commits, filled on reads) — staleness-free by naming
+        # successful commits, filled on reads) — staleness-free by naming;
+        # part-file names are uuid-unique, so one map covers all shards
         self._headers_by_path: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
         # catalog_stats shows the O(1) metadata claim: `builds` counts full
         # snapshot walks, `hits` counts reads served by a cached catalog
         self.catalog_stats: Dict[str, int] = {"builds": 0, "hits": 0}
+        # commit_stats shows the scale-out claim: `commits` = landed shard
+        # commits, `conflicts` = CommitConflicts observed by batches,
+        # `retries` = rebased re-commit attempts (see WriteBatch)
+        self.commit_stats: Dict[str, int] = {"commits": 0, "conflicts": 0,
+                                             "retries": 0}
+
+    @property
+    def table(self) -> DeltaTable:
+        """The first (or only) shard table.
+
+        Unsharded stores keep the old single-table API intact through this
+        alias; on sharded stores it doubles as the **meta shard** that holds
+        non-tensor rows (checkpoint manifests) via ``WriteBatch.add_rows``.
+        """
+        return self.tables[0]
 
     @property
     def io(self) -> ReadExecutor:
         """Shared read executor all fetches for this store go through."""
-        return self.table.io
+        return self.tables[0].io
 
     # -- catalog / handles ---------------------------------------------------
 
-    def catalog(self, version: Optional[int] = None) -> Catalog:
-        """The tensor index at ``version`` (latest if None); O(1) when cached."""
-        snap = self.table.snapshot(version)
-        cat = self._catalogs.get(snap.version)
+    def _snapshots_at(self, version: VersionArg):
+        """One snapshot per shard, resolved concurrently on the executor."""
+        vv = resolve_version_vector(self.shards, version)
+        if self.shards == 1:
+            return [self.tables[0].snapshot(vv[0])]
+        # fan the per-shard log replays out on the shared work pool: a
+        # cross-shard snapshot costs the makespan of N resolutions, not
+        # their sum
+        return self.io.map(lambda tv: tv[0].snapshot(tv[1]),
+                           list(zip(self.tables, vv)))
+
+    def catalog(self, version: VersionArg = None) -> Catalog:
+        """The merged tensor index at ``version`` (latest if None).
+
+        ``version`` is an int on 1-shard stores, a per-shard version vector
+        on sharded stores. O(1) when the vector is already cached.
+        """
+        snaps = self._snapshots_at(version)
+        key = tuple(s.version for s in snaps)
+        cat = self._catalogs.get(key)
         if cat is not None:
             self.catalog_stats["hits"] += 1
-            self._catalogs.move_to_end(snap.version)
+            self._catalogs.move_to_end(key)
             return cat
-        cat = Catalog(self, snap)
+        cat = Catalog(self, snaps)
         self.catalog_stats["builds"] += 1
-        self._catalogs[snap.version] = cat
+        self._catalogs[key] = cat
         while len(self._catalogs) > MAX_CACHED_CATALOGS:
             self._catalogs.popitem(last=False)
         return cat
 
-    def open(self, tid: str, *, version: Optional[int] = None) -> TensorRef:
+    def open(self, tid: str, *, version: VersionArg = None) -> TensorRef:
         """Lazy snapshot-pinned handle; fetches nothing until read."""
         return self.catalog(version).open(tid)
 
-    def _header_for_path(self, path: str) -> Dict[str, Any]:
+    def _header_for_path(self, path: str, shard: int = 0) -> Dict[str, Any]:
         cols = self._headers_by_path.get(path)
         if cols is not None:
             self._headers_by_path.move_to_end(path)
             return cols
-        data = self.io.fetch(self.table.store, f"{self.table.path}/{path}")
+        table = self.tables[shard]
+        data = self.io.fetch(table.store, f"{table.path}/{path}")
         cols = columnar.read_table(data)
         self._seed_header(path, cols)
         return cols
@@ -134,16 +199,23 @@ class DeltaTensorStore:
         get_codec(layout)  # fail fast on unknown layouts
         return layout, tensor_id or f"{layout}-{uuid.uuid4().hex[:12]}"
 
+    def shard_of(self, tensor_id: str) -> int:
+        """Shard index the router assigns ``tensor_id`` (0 when unsharded)."""
+        return self.router.shard_of(tensor_id)
+
     def _encode_and_upload(self, tensor: Any, *, layout: str,
                            tensor_id: str,
                            target_file_bytes: Optional[int] = None,
                            **codec_params):
         """Encode + upload part files (no commit). ``layout``/``tensor_id``
         must already be resolved (see :meth:`_resolve_tid`). Returns
-        ``(add_actions, header_seed)`` where header_seed is
+        ``(shard, add_actions, header_seed)`` where ``shard`` is the router-
+        assigned shard the files were uploaded into and header_seed is
         ``(path, columns)`` for post-commit caching, or None."""
         codec = get_codec(layout)
         tid = tensor_id
+        shard = self.router.shard_of(tid)
+        table = self.tables[shard]
         target = TARGET_FILE_BYTES if target_file_bytes is None else target_file_bytes
         groups = codec.encode(tensor, **{k: v for k, v in codec_params.items()
                                          if v is not None})
@@ -155,13 +227,13 @@ class DeltaTensorStore:
                                   max(_approx_row_bytes(grp.columns, rows), 1)))
             for lo in range(0, rows, per_file):
                 cols = _slice_columns(grp.columns, lo, min(rows, lo + per_file))
-                adds.append(self.table.append(
+                adds.append(table.append(
                     cols, commit=False,
                     partition_values={"tensor": tid, "kind": grp.kind,
                                       "layout": layout}))
             if grp.kind == "header":
                 header_seed = (adds[-1]["path"], grp.columns)
-        return adds, header_seed
+        return shard, adds, header_seed
 
     def put_deferred(self, tensor: Any, *, layout: str = "auto",
                      tensor_id: Optional[str] = None,
@@ -170,19 +242,29 @@ class DeltaTensorStore:
         """Upload part files WITHOUT committing; returns add-actions.
 
         Low-level two-phase building block (callers pass the adds to
-        ``table.commit_adds`` themselves). Prefer :meth:`batch`, which also
-        handles overwrites/deletes and post-commit header caching. Note no
-        header is cached here — an abandoned upload must leave no trace.
+        ``table.commit_adds`` themselves — on a sharded store that table is
+        ``store.tables[store.shard_of(tid)]``). Prefer :meth:`batch`, which
+        also handles overwrites/deletes, shard routing, and post-commit
+        header caching. Note no header is cached here — an abandoned upload
+        must leave no trace.
         """
         layout, tid = self._resolve_tid(tensor, layout, tensor_id)
-        adds, _ = self._encode_and_upload(
+        _shard, adds, _ = self._encode_and_upload(
             tensor, layout=layout, tensor_id=tid,
             target_file_bytes=target_file_bytes, **codec_params)
         return adds
 
-    def batch(self, *, op: str = "WRITE BATCH") -> WriteBatch:
-        """Stage many puts/deletes, commit them as ONE atomic version."""
-        return WriteBatch(self, op=op)
+    def batch(self, *, op: str = "WRITE BATCH",
+              commit_retries: Optional[int] = None) -> WriteBatch:
+        """Stage many puts/deletes; commit atomically per shard.
+
+        On an unsharded store the whole batch is ONE commit. On a sharded
+        store staged actions split by shard and land as one atomic commit
+        per touched shard, each fenced against the batch's base snapshot
+        with a bounded commit-retry/rebase loop on ``CommitConflict``
+        (``commit_retries`` bounds it; see :class:`WriteBatch`).
+        """
+        return WriteBatch(self, op=op, commit_retries=commit_retries)
 
     def put(self, tensor: Any, *, layout: str = "auto", tensor_id: Optional[str] = None,
             overwrite: bool = False, target_file_bytes: int = TARGET_FILE_BYTES,
@@ -199,26 +281,35 @@ class DeltaTensorStore:
 
     # -- read (legacy eager wrappers over the handle API) --------------------
 
-    def get(self, tid: str, *, version: Optional[int] = None) -> np.ndarray:
+    def get(self, tid: str, *, version: VersionArg = None) -> np.ndarray:
         return self.open(tid, version=version).read()
 
-    def get_coo(self, tid: str, *, version: Optional[int] = None) -> SparseCOO:
+    def get_coo(self, tid: str, *, version: VersionArg = None) -> SparseCOO:
         return self.open(tid, version=version).read_coo()
 
     def get_slice(self, tid: str, slices: Sequence[Optional[Tuple[int, int]]], *,
-                  version: Optional[int] = None) -> np.ndarray:
+                  version: VersionArg = None) -> np.ndarray:
         return self.open(tid, version=version).read_slice(slices)
 
     # -- catalog conveniences -------------------------------------------------
 
-    def list_tensors(self, version: Optional[int] = None) -> List[Tuple[str, str]]:
+    def list_tensors(self, version: VersionArg = None) -> List[Tuple[str, str]]:
         return self.catalog(version).tensors()
 
-    def shape_of(self, tid: str, *, version: Optional[int] = None) -> Tuple[int, ...]:
+    def shape_of(self, tid: str, *, version: VersionArg = None) -> Tuple[int, ...]:
         return self.open(tid, version=version).shape
 
-    def tensor_bytes(self, tid: str, *, version: Optional[int] = None) -> int:
+    def tensor_bytes(self, tid: str, *, version: VersionArg = None) -> int:
         return self.open(tid, version=version).nbytes
 
-    def version(self) -> int:
-        return self.table.version()
+    def version(self) -> Union[int, Tuple[int, ...]]:
+        """Latest version: an int (1-shard) or the per-shard version vector."""
+        if self.shards == 1:
+            return self.tables[0].version()
+        return self.version_vector()
+
+    def version_vector(self) -> Tuple[int, ...]:
+        """Latest per-shard versions, probed concurrently on the executor."""
+        if self.shards == 1:
+            return (self.tables[0].version(),)
+        return tuple(self.io.map(lambda t: t.version(), self.tables))

@@ -52,7 +52,18 @@ class Snapshot:
 
 
 class CommitConflict(Exception):
-    pass
+    """A fenced commit lost to a concurrent writer (or retries ran out).
+
+    ``expected``/``found`` carry the version fence that failed so callers
+    implementing rebase loops (e.g. ``WriteBatch``) can re-snapshot from
+    ``found`` instead of re-probing the log.
+    """
+
+    def __init__(self, msg: str, *, expected: Optional[int] = None,
+                 found: Optional[int] = None):
+        super().__init__(msg)
+        self.expected = expected
+        self.found = found
 
 
 class DeltaLog:
@@ -81,7 +92,8 @@ class DeltaLog:
             latest = self.latest_version()
             if expected_version is not None and latest != expected_version:
                 raise CommitConflict(
-                    f"expected v{expected_version}, found v{latest}")
+                    f"expected v{expected_version}, found v{latest}",
+                    expected=expected_version, found=latest)
             version = latest + 1
             payload = "\n".join(
                 json.dumps(a, separators=(",", ":"))
@@ -95,7 +107,9 @@ class DeltaLog:
                 self._latest = max(self._latest or -1, version)
                 attempt += 1
                 if expected_version is not None or attempt > max_retries:
-                    raise CommitConflict(f"lost commit race at v{version}")
+                    raise CommitConflict(f"lost commit race at v{version}",
+                                         expected=expected_version,
+                                         found=version)
                 continue
             self._latest = max(self._latest or -1, version)
             if version % CHECKPOINT_INTERVAL == 0:

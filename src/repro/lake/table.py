@@ -142,10 +142,20 @@ class DeltaTable:
         return add
 
     def commit_adds(self, adds: List[Dict[str, Any]], *, removes: Sequence[str] = (),
-                    op: str = "WRITE") -> int:
+                    op: str = "WRITE",
+                    expected_version: Optional[int] = None) -> int:
+        """Commit staged adds/removes as one version.
+
+        ``expected_version`` fences the commit against exactly that snapshot
+        (raises :class:`~repro.lake.log.CommitConflict` if a concurrent
+        writer landed first) — the serializable-writer primitive that
+        ``WriteBatch``'s commit-retry/rebase loop is built on. Without it,
+        losers of the log race blindly rebase and retry, which is only safe
+        for append-only action lists.
+        """
         actions: List[Dict[str, Any]] = [{"add": a} for a in adds]
         actions += [{"remove": {"path": p}} for p in removes]
-        return self.log.commit(actions, op=op)
+        return self.log.commit(actions, op=op, expected_version=expected_version)
 
     # -- read -----------------------------------------------------------------
 

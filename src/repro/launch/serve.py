@@ -28,6 +28,9 @@ def main() -> None:
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-shards", type=int, default=None,
+                    help="shard count for the checkpoint store (fixed at "
+                         "store-create time; omit to use what exists)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
@@ -43,7 +46,8 @@ def main() -> None:
 
     params = transformer.init_params(cfg, jax.random.key(args.seed))
     if args.ckpt_dir:
-        ckpt = ckpt_mod.DeltaCheckpointer(LocalFSObjectStore(args.ckpt_dir))
+        ckpt = ckpt_mod.DeltaCheckpointer(LocalFSObjectStore(args.ckpt_dir),
+                                          shards=args.ckpt_shards)
         if ckpt.restore_available():
             step, state = ckpt.restore(
                 trainer.init_state(cfg, jax.random.key(args.seed)))

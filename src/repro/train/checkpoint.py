@@ -46,8 +46,14 @@ def _leaf_hash(x: np.ndarray) -> str:
 
 class DeltaCheckpointer:
     def __init__(self, object_store: ObjectStore, root: str = "checkpoints", *,
-                 chunk_dims: Optional[int] = None):
-        self.store = DeltaTensorStore(object_store, root)
+                 chunk_dims: Optional[int] = None,
+                 shards: Optional[int] = None):
+        # shards=N scales concurrent-writer commit throughput: param leaves
+        # hash across N independent commit domains, so many hosts
+        # checkpointing into one logical store stop racing a single delta
+        # log. Manifest rows stay on shard 0 (the meta shard), so `steps`/
+        # `restore` discovery below scans one table regardless of N.
+        self.store = DeltaTensorStore(object_store, root, shards=shards)
         self.chunk_dims = chunk_dims
         self._last_hashes: Dict[str, Tuple[str, str]] = {}  # leaf -> (hash, tid)
         self._thread: Optional[threading.Thread] = None

@@ -1,0 +1,319 @@
+"""Sharded logical store: router, manifest, version vectors, commit-retry."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import DeltaTensorStore, ShardRouter, load_manifest
+from repro.core.sharding import resolve_version_vector, shard_table_path
+from repro.lake import CommitConflict, InMemoryObjectStore
+
+N_SHARDS = 4
+
+
+@pytest.fixture
+def obj():
+    return InMemoryObjectStore()
+
+
+@pytest.fixture
+def store(obj):
+    return DeltaTensorStore(obj, "tensors", shards=N_SHARDS)
+
+
+def tids_on_shard(router: ShardRouter, shard: int, n: int, prefix="t"):
+    """First n tensor ids the router hashes onto ``shard``."""
+    out, i = [], 0
+    while len(out) < n:
+        tid = f"{prefix}{i}"
+        if router.shard_of(tid) == shard:
+            out.append(tid)
+        i += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# router + manifest
+# ---------------------------------------------------------------------------
+
+def test_router_stable_and_covering():
+    r = ShardRouter(8)
+    # deterministic across instances (and, via blake2b, across processes)
+    assert all(r.shard_of(f"t{i}") == ShardRouter(8).shard_of(f"t{i}")
+               for i in range(100))
+    hit = {r.shard_of(f"t{i}") for i in range(200)}
+    assert hit == set(range(8))                  # every shard gets traffic
+    assert ShardRouter(1).shard_of("anything") == 0
+    with pytest.raises(ValueError):
+        ShardRouter(0)
+    with pytest.raises(ValueError):
+        ShardRouter(4, algo="md5")               # unknown router algo
+
+
+def test_version_vector_resolution():
+    assert resolve_version_vector(1, None) == (None,)
+    assert resolve_version_vector(1, 7) == (7,)
+    assert resolve_version_vector(3, None) == (None, None, None)
+    assert resolve_version_vector(3, (1, 2, 3)) == (1, 2, 3)
+    with pytest.raises(TypeError):
+        resolve_version_vector(3, 7)             # bare int is ambiguous
+    with pytest.raises(ValueError):
+        resolve_version_vector(3, (1, 2))        # wrong arity
+
+
+def test_manifest_created_and_reopened(obj, store):
+    m = load_manifest(obj, "tensors")
+    assert m["shards"] == N_SHARDS
+    reopened = DeltaTensorStore(obj, "tensors")  # no shards arg: inferred
+    assert reopened.shards == N_SHARDS
+    assert DeltaTensorStore(obj, "tensors", shards=N_SHARDS).shards == N_SHARDS
+    with pytest.raises(ValueError, match="fixed at create time"):
+        DeltaTensorStore(obj, "tensors", shards=2)
+
+
+def test_cannot_shard_over_existing_unsharded_table(obj):
+    """Regression: creating shards=N over a populated unsharded table would
+    silently shadow every existing tensor behind empty shard tables."""
+    s = DeltaTensorStore(obj, "legacy")
+    s.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id="x")
+    with pytest.raises(ValueError, match="already exists"):
+        DeltaTensorStore(obj, "legacy", shards=4)
+    np.testing.assert_array_equal(                # data still reachable
+        DeltaTensorStore(obj, "legacy").get("x"), np.ones((2, 2), np.float32))
+
+
+def test_mixed_none_version_vector_pins_latest_per_shard(store):
+    tid = tids_on_shard(store.router, 0, 1)[0]
+    store.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=tid)
+    vv = store.version()
+    store.put(np.full((2, 2), 5.0, np.float32), layout="ftsf",
+              tensor_id=tid, overwrite=True)
+    # pin shard 0 at the old version, let the rest resolve to latest
+    cat = store.catalog(version=(vv[0], None, None, None))
+    assert cat.version_vector[0] == vv[0]
+    np.testing.assert_array_equal(cat.open(tid).read(),
+                                  np.ones((2, 2), np.float32))
+
+
+def test_one_shard_store_is_byte_compatible(obj):
+    """shards=1 must produce the exact pre-sharding object layout."""
+    DeltaTensorStore(obj, "plain")               # the old default
+    keys_plain = set(obj.list("plain/"))
+    obj2 = InMemoryObjectStore()
+    DeltaTensorStore(obj2, "plain", shards=1)    # explicit 1-shard
+    assert set(obj2.list("plain/")) == keys_plain
+    assert load_manifest(obj2, "plain") is None  # no manifest written
+    # and an "old" table opens unchanged through the sharding-aware client
+    s = DeltaTensorStore(obj, "plain")
+    s.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id="x")
+    assert s.shards == 1 and isinstance(s.version(), int)
+    np.testing.assert_array_equal(
+        DeltaTensorStore(obj, "plain").get("x"), np.ones((2, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sharded reads/writes through the handle API
+# ---------------------------------------------------------------------------
+
+def test_sharded_roundtrip_merged_namespace(obj, store):
+    arrays = {f"t{i}": np.full((3, 5), i, np.float32) for i in range(12)}
+    with store.batch() as b:
+        for tid, x in arrays.items():
+            b.put(x, layout="ftsf", tensor_id=tid)
+    # tensors really spread across shard tables (files under shard dirs)
+    used = {store.shard_of(tid) for tid in arrays}
+    assert len(used) > 1
+    for shard in used:
+        assert any(obj.list(f"{shard_table_path('tensors', shard)}/"))
+    # one flat namespace on read
+    assert [t for t, _ in store.list_tensors()] == sorted(arrays)
+    for tid, x in arrays.items():
+        ref = store.open(tid)
+        assert ref.shard == store.shard_of(tid)
+        np.testing.assert_array_equal(ref.read(), x)
+        np.testing.assert_array_equal(ref[1:3], x[1:3])
+
+
+def test_version_vector_pinning_and_time_travel(store):
+    x1 = np.ones((4, 4), np.float32)
+    with store.batch() as b:
+        for tid in tids_on_shard(store.router, 0, 2) + \
+                   tids_on_shard(store.router, 1, 2):
+            b.put(x1, layout="ftsf", tensor_id=tid)
+    vv = store.version()
+    assert isinstance(vv, tuple) and len(vv) == N_SHARDS
+    tid0 = tids_on_shard(store.router, 0, 1)[0]
+    store.put(x1 * 9, layout="ftsf", tensor_id=tid0, overwrite=True)
+    assert store.version()[0] == vv[0] + 1       # only shard 0 advanced
+    np.testing.assert_array_equal(store.open(tid0).read(), x1 * 9)
+    np.testing.assert_array_equal(                # time travel by vector
+        store.open(tid0, version=vv).read(), x1)
+    with pytest.raises(TypeError):
+        store.open(tid0, version=3)              # bare int on sharded store
+
+
+def test_cross_shard_pinned_catalog_under_concurrent_writer(obj, store):
+    """A pinned version vector is one consistent logical snapshot even
+    while a second client overwrites tensors on several shards."""
+    writer = DeltaTensorStore(obj, "tensors")
+    tids = [tids_on_shard(store.router, s, 1, prefix=f"s{s}-")[0]
+            for s in range(N_SHARDS)]
+    with store.batch() as b:
+        for i, tid in enumerate(tids):
+            b.put(np.full((2, 2), i, np.float32), layout="ftsf",
+                  tensor_id=tid)
+    cat = store.catalog()                        # pin the vector
+    refs = [cat.open(t) for t in tids]
+    for tid in tids:                             # concurrent overwrites
+        writer.put(np.full((2, 2), -1.0, np.float32), layout="ftsf",
+                   tensor_id=tid, overwrite=True)
+    assert all(r.version == cat.version_vector for r in refs)
+    for i, (tid, ref) in enumerate(zip(tids, refs)):
+        np.testing.assert_array_equal(           # pinned: pre-overwrite
+            ref.read(), np.full((2, 2), i, np.float32))
+        np.testing.assert_array_equal(           # unpinned: sees the writer
+            store.open(tid).read(), np.full((2, 2), -1.0, np.float32))
+
+
+def test_delete_and_add_rows_on_sharded_store(obj, store):
+    tid = tids_on_shard(store.router, 2, 1)[0]
+    store.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=tid)
+    store.delete(tid)
+    with pytest.raises(KeyError):
+        store.open(tid)
+    with store.batch() as b:                     # raw rows -> meta shard 0
+        b.add_rows({"step": np.asarray([1], np.int64)},
+                   partition_values={"kind": "meta"})
+    assert any(store.table.scan(partition_filters={"kind": "meta"}))
+
+
+def test_writers_on_different_shards_never_conflict(obj, store):
+    """The scale-out claim in miniature: commits in disjoint shard domains
+    need no retries at all."""
+    a = DeltaTensorStore(obj, "tensors")
+    b = DeltaTensorStore(obj, "tensors")
+    tid_a = tids_on_shard(store.router, 0, 1, prefix="a")[0]
+    tid_b = tids_on_shard(store.router, 1, 1, prefix="b")[0]
+    ba = a.batch()
+    ba.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=tid_a)
+    bb = b.batch()                               # interleaved batches
+    bb.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=tid_b)
+    ba.commit()
+    bb.commit()
+    assert ba.conflicts == 0 and bb.conflicts == 0
+    assert a.commit_stats["conflicts"] == 0
+    assert b.commit_stats["conflicts"] == 0
+
+
+# ---------------------------------------------------------------------------
+# commit-retry / rebase
+# ---------------------------------------------------------------------------
+
+def test_rebase_resolves_disjoint_same_shard_conflict(obj, store):
+    """Deterministic interleaving: a racer lands in the same shard between
+    this batch's base pin and its commit; the rebase loop resolves it."""
+    racer = DeltaTensorStore(obj, "tensors")
+    t1, t2 = tids_on_shard(store.router, 3, 2)
+    b = store.batch()
+    b.put(np.full((2, 2), 1.0, np.float32), layout="ftsf", tensor_id=t1)
+    racer.put(np.full((2, 2), 2.0, np.float32), layout="ftsf", tensor_id=t2)
+    b.commit()                                   # conflicts, rebases, lands
+    assert b.conflicts == 1
+    assert store.commit_stats["retries"] == 1
+    np.testing.assert_array_equal(store.open(t1).read(),
+                                  np.full((2, 2), 1.0, np.float32))
+    np.testing.assert_array_equal(store.open(t2).read(),
+                                  np.full((2, 2), 2.0, np.float32))
+
+
+def test_two_threads_disjoint_tensors_same_shard_both_succeed(obj, store):
+    """The satellite's concurrency requirement, with real threads."""
+    shard = 1
+    per_writer = 3
+    errors = []
+    start = threading.Barrier(2)
+
+    def writer(wid: int):
+        client = DeltaTensorStore(obj, "tensors")
+        tids = tids_on_shard(client.router, shard, per_writer,
+                             prefix=f"w{wid}-")
+        try:
+            start.wait(timeout=30)
+            for tid in tids:
+                with client.batch(commit_retries=32) as b:
+                    b.put(np.full((2, 2), float(wid), np.float32),
+                          layout="ftsf", tensor_id=tid)
+        except BaseException as e:  # surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in (1, 2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors
+    reader = DeltaTensorStore(obj, "tensors")
+    for wid in (1, 2):                           # zero lost writes
+        for tid in tids_on_shard(reader.router, shard, per_writer,
+                                 prefix=f"w{wid}-"):
+            np.testing.assert_array_equal(
+                reader.open(tid).read(),
+                np.full((2, 2), float(wid), np.float32))
+
+
+def test_same_tensor_overlap_raises_commit_conflict(obj, store):
+    """Rebase cannot make two overwrites of one tensor commute."""
+    racer = DeltaTensorStore(obj, "tensors")
+    tid = tids_on_shard(store.router, 2, 1)[0]
+    store.put(np.zeros((2, 2), np.float32), layout="ftsf", tensor_id=tid)
+    b = store.batch(commit_retries=8)
+    b.put(np.full((2, 2), 1.0, np.float32), layout="ftsf", tensor_id=tid,
+          overwrite=True)                        # base pinned here
+    racer.put(np.full((2, 2), 2.0, np.float32), layout="ftsf",
+              tensor_id=tid, overwrite=True)     # overlaps concurrently
+    with pytest.raises(CommitConflict, match="concurrently modified"):
+        b.commit()
+    # the racer's write is intact — the failed batch changed nothing
+    np.testing.assert_array_equal(store.open(tid).read(),
+                                  np.full((2, 2), 2.0, np.float32))
+
+
+def test_retries_exhausted_raises(obj, store):
+    racer = DeltaTensorStore(obj, "tensors")
+    t1, t2 = tids_on_shard(store.router, 0, 2)
+    b = store.batch(commit_retries=0)            # no rebase budget at all
+    b.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=t1)
+    racer.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=t2)
+    with pytest.raises(CommitConflict):
+        b.commit()
+
+
+def test_checkpoint_roundtrip_on_sharded_store(obj):
+    """Consumer integration: leaves hash across shards, manifest rows stay
+    on the meta shard, restore reads one consistent vector."""
+    from repro.train.checkpoint import DeltaCheckpointer
+
+    state = {f"layer{i}": np.full((4, 3), float(i), np.float32)
+             for i in range(8)}
+    ckpt = DeltaCheckpointer(obj, "ckpts", shards=N_SHARDS)
+    assert ckpt.store.shards == N_SHARDS
+    ckpt.save(3, state)
+    shards_used = {ckpt.store.shard_of(f"layer{i}@3") for i in range(8)}
+    assert len(shards_used) > 1                  # leaves really spread
+    restored_step, restored = DeltaCheckpointer(obj, "ckpts").restore(state)
+    assert restored_step == 3
+    for k, v in state.items():
+        np.testing.assert_array_equal(restored[k], v)
+
+
+def test_batch_spanning_shards_reports_vector(store):
+    t0 = tids_on_shard(store.router, 0, 1)[0]
+    t1 = tids_on_shard(store.router, 1, 1)[0]
+    base = store.version()
+    with store.batch() as b:
+        b.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=t0)
+        b.put(np.ones((2, 2), np.float32), layout="ftsf", tensor_id=t1)
+    assert sorted(b.shard_versions) == [0, 1]    # one commit per shard
+    assert b.version == (base[0] + 1, base[1] + 1, base[2], base[3])
+    assert store.version() == b.version
