@@ -1,0 +1,181 @@
+"""Maintenance lifecycle: space reclaimed after churn, spilled-index catalog.
+
+Two claims from the lifecycle subsystem, measured on the paper's modeled
+object store (1 Gbps, 10 ms RTT, virtual clock):
+
+* **churn reclamation** — an overwrite-heavy workload (every tensor
+  overwritten R times) leaves R dead generations per tensor. While refs
+  pin the original snapshot, ``store.vacuum`` reclaims nothing (lease
+  safety); once the leases are released it must reclaim >= 50% of the
+  store's data bytes (the acceptance floor; the expected value for R=4
+  churn is ~80%).
+
+* **catalog build: walked vs spilled** — a table grown to 1e4 files over
+  many commits. A cold client's ``Catalog.build`` either replays the
+  snapshot (checkpoint get + trailing commit gets + an O(files)
+  classification pass) or loads the spilled ``_catalog/<v>.index.json``
+  in one get with zero snapshot walks (``catalog_stats`` proves it).
+  Modeled I/O time is deterministic, so ``speedup_io`` is the regression
+  gate; CPU time is reported for context.
+
+With ``--json`` (or :func:`run`'s ``json_path``) results land in
+``BENCH_maintenance.json`` so ``check_regression.py`` can gate PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import DeltaTensorStore
+from repro.lake import DeltaTable, ReadExecutor
+
+from .common import fresh_store, row
+
+CHURN_TENSORS = 8
+CHURN_ROUNDS = 4
+CHURN_SHAPE = (64, 64)
+
+CATALOG_FILES = 10_000
+CATALOG_COMMITS = 100          # files land over many commits, as in real life
+CATALOG_TENSORS = 200          # distinct tensor ids in the index
+
+
+def _data_bytes(obj, root: str) -> int:
+    return sum(obj.head(k) for k in obj.list(f"{root}/")
+               if "_delta_log" not in k and "/_catalog/" not in k)
+
+
+def churn_workload():
+    obj, lm = fresh_store(parallelism=8)
+    io = ReadExecutor(max_workers=8, cache_bytes=0)
+    try:
+        store = DeltaTensorStore(obj, "tensors", io=io)
+        rng = np.random.default_rng(0)
+        originals = {}
+        for i in range(CHURN_TENSORS):
+            originals[f"t{i}"] = rng.standard_normal(CHURN_SHAPE).astype(np.float32)
+            store.put(originals[f"t{i}"], layout="ftsf", tensor_id=f"t{i}")
+        refs = [store.open(f"t{i}") for i in range(CHURN_TENSORS)]
+
+        for _ in range(CHURN_ROUNDS):
+            with store.batch() as b:
+                for i in range(CHURN_TENSORS):
+                    b.put(rng.standard_normal(CHURN_SHAPE).astype(np.float32),
+                          layout="ftsf", tensor_id=f"t{i}", overwrite=True)
+
+        before = _data_bytes(obj, "tensors")
+        # vacuum under leases: intermediate churn generations (pinned by
+        # nobody) are reclaimable, the leased original generation is not
+        r1 = store.vacuum(keep_versions=1)
+        leased_bytes = _data_bytes(obj, "tensors")
+        for i, ref in enumerate(refs):  # pinned reads still byte-identical
+            assert np.array_equal(ref.read(), originals[f"t{i}"])
+            ref.close()
+        # leases released: the next vacuum frees the original generation too
+        r2 = store.vacuum(keep_versions=1)
+        reclaimed = sum(r.bytes_reclaimed for r in r1 + r2)
+        after_release = sum(r.bytes_reclaimed for r in r2)
+        assert after_release > 0      # release actually freed bytes
+        return {
+            "tensors": CHURN_TENSORS, "rounds": CHURN_ROUNDS,
+            "data_bytes_before": before,
+            "data_bytes_while_leased": leased_bytes,
+            "bytes_reclaimed": reclaimed,
+            "bytes_reclaimed_after_release": after_release,
+            "files_deleted": sum(r.files_deleted for r in r1 + r2),
+            "reclaimed_frac": reclaimed / before if before else 0.0,
+        }
+    finally:
+        io.shutdown()
+
+
+def _grown_table(obj):
+    """A table with CATALOG_FILES adds spread over CATALOG_COMMITS commits."""
+    t = DeltaTable.create(obj, "tensors",
+                          io=ReadExecutor(max_workers=8, cache_bytes=0))
+    per_commit = CATALOG_FILES // CATALOG_COMMITS
+    n = 0
+    for _c in range(CATALOG_COMMITS):
+        adds = []
+        for _f in range(per_commit):
+            tid = f"t{n % CATALOG_TENSORS:04d}"
+            kind = "header" if n % 50 == 0 else "chunks"
+            adds.append(t.append({"chunk_index": np.arange(1)}, commit=False,
+                                 partition_values={"tensor": tid,
+                                                   "kind": kind,
+                                                   "layout": "ftsf"}))
+            n += 1
+        t.commit_adds(adds)
+    return t
+
+
+def catalog_workload():
+    obj, lm = fresh_store(parallelism=8)
+    _grown_table(obj)
+
+    def build(spill_threshold):
+        client = DeltaTensorStore(
+            obj, "tensors", spill_threshold=spill_threshold,
+            io=ReadExecutor(max_workers=8, cache_bytes=0))
+        lm.reset()
+        t0 = time.perf_counter()
+        cat = client.catalog()
+        cpu = time.perf_counter() - t0
+        assert len(cat) == CATALOG_TENSORS
+        return {"cpu_s": cpu, "io_s": lm.elapsed_s, "requests": lm.requests,
+                "total_s": cpu + lm.elapsed_s,
+                "snapshot_walks": client.catalog_stats["snapshot_walks"],
+                "index_loads": client.catalog_stats["index_loads"]}
+
+    walk = build(spill_threshold=None)       # index never consulted
+    # spill the index (what a threshold-crossing commit does), then rebuild
+    DeltaTensorStore(obj, "tensors",
+                     io=ReadExecutor(max_workers=4,
+                                     cache_bytes=0)).spill_catalog()
+    spilled = build(spill_threshold=512)
+    assert spilled["snapshot_walks"] == 0    # the acceptance invariant
+    return {
+        "files": CATALOG_FILES, "commits": CATALOG_COMMITS,
+        "walk": walk, "spilled": spilled,
+        "speedup_io": walk["io_s"] / spilled["io_s"] if spilled["io_s"] else 0.0,
+        "speedup_total": (walk["total_s"] / spilled["total_s"]
+                          if spilled["total_s"] else 0.0),
+    }
+
+
+def run(json_path=None):
+    results = {"bench": "maintenance"}
+    lines = []
+
+    churn = churn_workload()
+    results["churn"] = churn
+    lines.append(row("maintenance_churn_reclaim", 0.0,
+                     f"reclaimed={churn['reclaimed_frac']:.2f} "
+                     f"of {churn['data_bytes_before']}B "
+                     f"post_release={churn['bytes_reclaimed_after_release']}B"))
+
+    cat = catalog_workload()
+    results["catalog"] = cat
+    lines.append(row("maintenance_catalog_walked",
+                     cat["walk"]["total_s"] * 1e6,
+                     f"files={cat['files']} io_s={cat['walk']['io_s']:.4f} "
+                     f"walks={cat['walk']['snapshot_walks']}"))
+    lines.append(row("maintenance_catalog_spilled",
+                     cat["spilled"]["total_s"] * 1e6,
+                     f"files={cat['files']} io_s={cat['spilled']['io_s']:.4f} "
+                     f"walks={cat['spilled']['snapshot_walks']} "
+                     f"speedup_io={cat['speedup_io']:.2f}x"))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(json_path="BENCH_maintenance.json"):
+        print(line)

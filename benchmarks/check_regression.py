@@ -11,7 +11,12 @@ configuration lost a write. Gated metrics:
 * ``BENCH_read_path.json``  — width-8 parallel ``get`` speedup over serial;
 * ``BENCH_shard_scale.json`` — 4-shard commit-throughput ratio vs 1 shard
   under 8 concurrent writers (the sharding scale-out claim), plus the
-  zero-lost-writes invariant across every writer/shard configuration.
+  zero-lost-writes invariant across every writer/shard configuration;
+* ``BENCH_maintenance.json`` — fraction of data bytes vacuum reclaims
+  after the churn workload (also hard-floored at 0.50 regardless of
+  baseline), modeled-I/O speedup of a spilled-index catalog build over a
+  snapshot walk, and the invariant that the spilled build performed zero
+  snapshot walks.
 
 Improvements never fail the gate; commit a refreshed baseline JSON when a
 PR deliberately moves a metric.
@@ -31,7 +36,14 @@ GATES = [
      lambda d: float(d["speedup"]["8"]["get"])),
     ("BENCH_shard_scale.json", "4-shard/1-shard commit throughput @ 8 writers",
      lambda d: float(d["throughput_ratio_vs_1shard_w8"]["4"])),
+    ("BENCH_maintenance.json", "vacuum reclaimed fraction after churn",
+     lambda d: float(d["churn"]["reclaimed_frac"])),
+    ("BENCH_maintenance.json", "spilled-index catalog build io speedup",
+     lambda d: float(d["catalog"]["speedup_io"])),
 ]
+
+# invariants checked on the fresh run only (no baseline comparison)
+MIN_RECLAIMED_FRAC = 0.50
 
 
 def _load(path: str) -> dict:
@@ -71,6 +83,21 @@ def main(argv=None) -> int:
                 failures.append(f"lost_writes s{shards} w{writers}")
     if not failures:
         print("[OK] zero lost writes in every shard/writer configuration")
+
+    maint = _load(os.path.join(args.fresh, "BENCH_maintenance.json"))
+    frac = float(maint["churn"]["reclaimed_frac"])
+    if frac < MIN_RECLAIMED_FRAC:
+        print(f"[REGRESSION] churn vacuum reclaimed {frac:.2f} "
+              f"< hard floor {MIN_RECLAIMED_FRAC:.2f}")
+        failures.append("churn reclaimed_frac floor")
+    walks = int(maint["catalog"]["spilled"]["snapshot_walks"])
+    if walks != 0:
+        print(f"[REGRESSION] spilled catalog build did {walks} snapshot "
+              f"walk(s); must be 0")
+        failures.append("spilled catalog snapshot_walks")
+    if frac >= MIN_RECLAIMED_FRAC and walks == 0:
+        print(f"[OK] churn reclaim {frac:.2f} >= {MIN_RECLAIMED_FRAC:.2f}; "
+              f"spilled catalog build walked 0 snapshots")
 
     if failures:
         print(f"FAIL: {len(failures)} gate(s) regressed: "

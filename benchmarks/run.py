@@ -8,17 +8,18 @@ Prints ``name,us_per_call,derived`` CSV rows:
   §Roofline -> roofline (from dry-run artifacts, if present)
   read-path scaling -> bench_read_path (serial vs parallel vs cached)
   shard scale-out -> bench_shard_scale (commit throughput vs shard count)
+  maintenance lifecycle -> bench_maintenance (churn reclaim, spilled index)
 """
 
 
 def main() -> None:
     from . import (bench_dense_ftsf, bench_grad_compress, bench_kernels,
-                   bench_read_path, bench_shard_scale, bench_sparse_formats,
-                   roofline)
+                   bench_maintenance, bench_read_path, bench_shard_scale,
+                   bench_sparse_formats, roofline)
     print("name,us_per_call,derived")
     for mod in (bench_dense_ftsf, bench_sparse_formats, bench_kernels,
                 bench_grad_compress, roofline, bench_read_path,
-                bench_shard_scale):
+                bench_shard_scale, bench_maintenance):
         try:
             for line in mod.run():
                 print(line)

@@ -7,8 +7,10 @@ WriteBatch), and device-side (jit) encodings for in-training use.
 from .encodings.base import Codec, SparseCOO, get_codec, normalize_slices
 from .encodings import ftsf, coo, csr, csf, bsgs  # noqa: F401 (register codecs)
 from .sparsity import SPARSE_THRESHOLD, choose_layout, density
-from .catalog import Catalog, TensorEntry, TensorRef
+from .catalog import (Catalog, ShardSource, TensorEntry, TensorRef,
+                      build_catalog_index)
 from .batch import BatchClosedError, WriteBatch
+from .leases import Lease, LeaseRegistry, RetentionPolicy, registry_for
 from .sharding import ShardRouter, VersionVector, load_manifest
 from .store import DeltaTensorStore
 
@@ -16,4 +18,5 @@ __all__ = ["Codec", "SparseCOO", "get_codec", "normalize_slices",
            "SPARSE_THRESHOLD", "choose_layout", "density", "DeltaTensorStore",
            "Catalog", "TensorEntry", "TensorRef", "WriteBatch",
            "BatchClosedError", "ShardRouter", "VersionVector",
-           "load_manifest"]
+           "load_manifest", "Lease", "LeaseRegistry", "RetentionPolicy",
+           "registry_for", "ShardSource", "build_catalog_index"]

@@ -87,6 +87,10 @@ class WriteBatch:
         #   adds:  add-actions uploaded for this op
         #   removes: file paths this op removes (resolved at the base)
         self._ops: List[Dict[str, Any]] = []
+        # per-shard upload guards: staged part files register as in-flight
+        # so a concurrent vacuum cannot delete them as orphans before the
+        # commit lands; closed on commit/abandon (see UploadGuard)
+        self._guards: Dict[int, Any] = {}
         # header seeds applied to the store's by-path cache ONLY on a
         # successful commit (never for an abandoned batch)
         self._header_seeds: List[tuple] = []
@@ -107,6 +111,16 @@ class WriteBatch:
         if self._closed:
             raise BatchClosedError("WriteBatch already committed or abandoned")
 
+    def _guard(self, shard: int):
+        g = self._guards.get(shard)
+        if g is None:
+            g = self._guards[shard] = self._store.tables[shard].guard_uploads()
+        return g
+
+    def _close_guards(self) -> None:
+        for g in self._guards.values():
+            g.close()
+
     def put(self, tensor: Any, *, layout: str = "auto",
             tensor_id: Optional[str] = None, overwrite: bool = False,
             target_file_bytes: Optional[int] = None, **codec_params) -> str:
@@ -123,7 +137,9 @@ class WriteBatch:
                 f"tensor {tid!r} already exists (use overwrite=True)")
         shard, adds, header_seed = self._store._encode_and_upload(
             tensor, layout=layout, tensor_id=tid,
-            target_file_bytes=target_file_bytes, **codec_params)
+            target_file_bytes=target_file_bytes,
+            guard=self._guard(self._store.router.shard_of(tid)),
+            **codec_params)
         self._ops.append({"kind": "put", "shard": shard, "tid": tid,
                           "adds": adds, "removes": sorted(existing)})
         if header_seed is not None:
@@ -153,7 +169,8 @@ class WriteBatch:
         """
         self._check_open()
         add = self._store.tables[0].append(
-            columns, commit=False, partition_values=partition_values or {})
+            columns, commit=False, partition_values=partition_values or {},
+            guard=self._guard(0))
         self._ops.append({"kind": "rows", "shard": 0, "tid": None,
                           "adds": [add], "removes": []})
 
@@ -226,7 +243,14 @@ class WriteBatch:
         if not self._ops:
             self._version = self._store.version()
             return self._version
+        try:
+            return self._commit_shards()
+        finally:
+            # committed files are live in snapshots, failed ones are
+            # vacuumable orphans — either way the in-flight guard is done
+            self._close_guards()
 
+    def _commit_shards(self) -> Union[None, int, Tuple[int, ...]]:
         per_shard: Dict[int, List[Dict[str, Any]]] = {}
         for op in self._ops:
             per_shard.setdefault(op["shard"], []).append(op)
@@ -256,6 +280,11 @@ class WriteBatch:
                     # rebase: raises CommitConflict itself on real overlap
                     expected = self._rebase(table, ops)
                     stats["retries"] += 1
+            # spill-to-index hook: once a shard snapshot crosses the
+            # store's threshold, write the catalog index beside the log so
+            # cold readers skip the O(files) walk (cheap-guarded no-op on
+            # small shards)
+            self._store._maybe_spill(shard, v, adds_hint=len(adds))
 
         if self._store.shards == 1:
             self._version = self.shard_versions[0]
@@ -267,8 +296,10 @@ class WriteBatch:
         return self._version
 
     def abandon(self) -> None:
-        """Drop the batch; uploaded part files remain invisible."""
+        """Drop the batch; uploaded part files remain invisible (and,
+        with the upload guards closed, vacuumable as orphans)."""
         self._closed = True
+        self._close_guards()
 
     def __enter__(self) -> "WriteBatch":
         return self

@@ -23,10 +23,24 @@ built from one snapshot per shard table and pinned to the resulting
 remembers its shard, so refs route fetches to the right shard table while
 consumers see one flat tensor namespace. One logical snapshot = one tuple
 of shard versions; there is no single total order across shards.
+
+**Spilled indexes** (the NeurStore move: keep the index beside the data):
+past a file-count threshold the store writes the per-tensor grouping of a
+committed shard snapshot to ``<table>/_catalog/<version>.index.json``. A
+catalog built for a spilled version is then ONE object get + a dict load
+(:class:`ShardSource` with ``index`` set) instead of a full snapshot walk
+(log replay + O(files) classification); absent indexes fall back to the
+walk transparently. :func:`build_catalog_index` defines the format.
+
+**Leases**: every :class:`TensorRef` acquires a
+:class:`~repro.core.leases.Lease` on its catalog's version vector at
+construction and releases it on ``close()`` / context-manager exit / GC,
+so ``store.vacuum()`` never deletes files a live ref still needs.
 """
 
 from __future__ import annotations
 
+import weakref
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import (TYPE_CHECKING, Any, Dict, Iterator, List, Optional,
@@ -41,6 +55,39 @@ from .encodings.base import (SparseCOO, get_codec, header_dtype,
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle is typing-only
     from .store import DeltaTensorStore
+
+CATALOG_INDEX_FORMAT = 1
+
+
+def build_catalog_index(snapshot: Snapshot) -> Dict[str, Any]:
+    """The spilled form of one shard snapshot's tensor grouping.
+
+    Deterministic for a given snapshot (add-actions walk in sorted path
+    order), so re-spilling a version is idempotent and an index-built
+    catalog is bit-for-bit identical to a walk-built one.
+    """
+    tensors: Dict[str, Dict[str, Any]] = {}
+    for add in snapshot.add_actions():
+        pv = add.get("partitionValues") or {}
+        tid = pv.get("tensor")
+        if tid is None:
+            continue  # non-tensor rows (e.g. checkpoint manifests)
+        rec = tensors.setdefault(
+            tid, {"layout": pv.get("layout", "?"), "header": [], "chunks": []})
+        key = "header" if pv.get("kind") == "header" else "chunks"
+        rec[key].append(add)
+    return {"format": CATALOG_INDEX_FORMAT, "version": snapshot.version,
+            "files": len(snapshot.files), "tensors": tensors}
+
+
+@dataclass(frozen=True)
+class ShardSource:
+    """One shard's contribution to a catalog: a walked snapshot OR a
+    loaded spilled index (exactly one of the two is set)."""
+
+    version: int
+    snapshot: Optional[Snapshot] = None
+    index: Optional[Dict[str, Any]] = None
 
 
 @dataclass
@@ -75,15 +122,28 @@ class Catalog:
     """
 
     def __init__(self, store: "DeltaTensorStore",
-                 snapshots: Union[Snapshot, Sequence[Snapshot]]):
+                 sources: Union[Snapshot, ShardSource,
+                                Sequence[Union[Snapshot, ShardSource]]]):
         self._store = store
-        if isinstance(snapshots, Snapshot):
-            snapshots = [snapshots]
-        self._snapshots: Tuple[Snapshot, ...] = tuple(snapshots)
+        if isinstance(sources, (Snapshot, ShardSource)):
+            sources = [sources]
+        self._sources: Tuple[ShardSource, ...] = tuple(
+            s if isinstance(s, ShardSource)
+            else ShardSource(version=s.version, snapshot=s)
+            for s in sources)
+        self._versions: Tuple[int, ...] = tuple(s.version for s in self._sources)
         self._entries: Dict[str, TensorEntry] = {}
         self._headers: Dict[str, Dict[str, Any]] = {}  # tid -> parsed header
-        for shard, snapshot in enumerate(self._snapshots):
-            for add in snapshot.add_actions():
+        for shard, source in enumerate(self._sources):
+            if source.index is not None:
+                # spilled path: the grouping work was done at write time
+                for tid, rec in source.index["tensors"].items():
+                    self._entries[tid] = TensorEntry(
+                        tensor_id=tid, layout=rec["layout"], shard=shard,
+                        header_adds=list(rec["header"]),
+                        chunk_adds=list(rec["chunks"]))
+                continue
+            for add in source.snapshot.add_actions():
                 pv = add.get("partitionValues", {}) or {}
                 tid = pv.get("tensor")
                 if tid is None:
@@ -104,18 +164,18 @@ class Catalog:
     def version(self) -> Union[int, Tuple[int, ...]]:
         """Pinned version: an int on 1-shard stores (the pre-sharding API),
         a per-shard version vector tuple on sharded stores."""
-        if len(self._snapshots) == 1:
-            return self._snapshots[0].version
+        if len(self._versions) == 1:
+            return self._versions[0]
         return self.version_vector
 
     @property
     def version_vector(self) -> Tuple[int, ...]:
         """Per-shard pinned versions (1-tuple on unsharded stores)."""
-        return tuple(s.version for s in self._snapshots)
+        return self._versions
 
     @property
     def n_shards(self) -> int:
-        return len(self._snapshots)
+        return len(self._versions)
 
     def table_for(self, shard: int):
         """The shard's :class:`~repro.lake.table.DeltaTable`."""
@@ -182,11 +242,36 @@ class TensorRef:
     paper's read-tensor / read-slice operations against the pinned snapshot,
     pruning chunk files via codec pushdown before fanning fetches out on the
     shared executor. ``__getitem__`` gives the numpy view of the same thing.
+
+    Construction acquires a **lease** on the pinned version vector, which
+    ``store.vacuum()`` honors: the snapshot's files cannot be deleted under
+    a live ref. ``close()`` (or context-manager exit, or garbage collection
+    via a weakref finalizer) releases it; reads after close still work but
+    are no longer protected from maintenance.
     """
 
     def __init__(self, catalog: Catalog, entry: TensorEntry):
         self._catalog = catalog
         self._entry = entry
+        self._lease = catalog._store.leases.acquire(catalog.version_vector)
+        # GC backstop: a dropped ref must not pin its snapshot forever
+        self._finalizer = weakref.finalize(self, self._lease.release)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self) -> None:
+        """Release this ref's snapshot lease (idempotent)."""
+        self._finalizer()
+
+    @property
+    def closed(self) -> bool:
+        return not self._finalizer.alive
+
+    def __enter__(self) -> "TensorRef":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     # -- metadata (header-only) ------------------------------------------------
 

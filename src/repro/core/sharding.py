@@ -86,12 +86,20 @@ def load_manifest(store: ObjectStore, root: str) -> Optional[dict]:
 
 
 def load_or_init_manifest(store: ObjectStore, root: str,
-                          shards: Optional[int]) -> dict:
+                          shards: Optional[int],
+                          retention: Optional[dict] = None) -> dict:
     """Resolve the store's shard layout, creating the manifest if needed.
 
     ``shards=None`` means "whatever the store already is" (1 when nothing
     exists yet). An explicit ``shards`` that contradicts an existing
     manifest is a hard error — N is immutable for the life of the store.
+
+    ``retention`` (e.g. ``{"keep_versions": 3, "ttl_s": None}``) is
+    recorded at create time on **sharded** manifests so every client —
+    including the ``repro.launch.gc`` maintenance CLI — agrees on the
+    store's default vacuum policy without out-of-band configuration.
+    Unsharded stores write no manifest (byte-compat with pre-sharding
+    tables), so their retention default stays client-side.
     """
     existing = load_manifest(store, root)
     if existing is not None:
@@ -115,6 +123,8 @@ def load_or_init_manifest(store: ObjectStore, root: str,
             f"create time)")
     manifest = {"shards": int(shards), "router": ROUTER_ALGO,
                 "format": MANIFEST_FORMAT}
+    if retention is not None:
+        manifest["retention"] = dict(retention)
     body = json.dumps(manifest, sort_keys=True,
                       separators=(",", ":")).encode("utf-8")
     try:

@@ -34,6 +34,8 @@ with no manifest, so every existing table opens unchanged.
 
 from __future__ import annotations
 
+import json
+import time
 import uuid
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -42,9 +44,12 @@ import numpy as np
 
 from ..lake import DeltaTable, ObjectStore, ReadExecutor, columnar
 from ..lake.io import get_default_executor
+from ..lake.log import ObjectNotFoundError, catalog_index_key
+from ..lake.table import CompactResult, VacuumResult
 from .batch import WriteBatch
-from .catalog import Catalog, TensorRef
+from .catalog import Catalog, ShardSource, TensorRef, build_catalog_index
 from .encodings.base import SparseCOO, get_codec
+from .leases import Lease, RetentionPolicy, lease_scope, registry_for
 from .sharding import (ROUTER_ALGO, ShardRouter, load_or_init_manifest,
                        resolve_version_vector, shard_table_path)
 from .sparsity import choose_layout
@@ -53,6 +58,11 @@ TARGET_FILE_BYTES = 4 << 20
 
 MAX_CACHED_CATALOGS = 16
 MAX_CACHED_HEADERS = 1024
+
+# shard snapshots at or past this many files spill a catalog index next to
+# the delta log on commit, so later Catalog.builds are one O(1) index load
+# instead of an O(files) snapshot walk (None disables spilling)
+DEFAULT_SPILL_THRESHOLD = 512
 
 
 def _approx_row_bytes(columns: Dict[str, Any], rows: int) -> float:
@@ -87,11 +97,29 @@ VersionArg = Union[None, int, Sequence[int]]
 class DeltaTensorStore:
     def __init__(self, object_store: ObjectStore, root: str = "tensor_store",
                  io: Optional[ReadExecutor] = None,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None,
+                 retention: Optional[RetentionPolicy] = None,
+                 spill_threshold: Optional[int] = DEFAULT_SPILL_THRESHOLD):
         root = root.rstrip("/")
         self.root = root
-        manifest = load_or_init_manifest(object_store, root, shards)
+        manifest = load_or_init_manifest(
+            object_store, root, shards,
+            retention=None if retention is None else
+            {"keep_versions": retention.keep_versions,
+             "ttl_s": retention.ttl_s})
         self.shards: int = int(manifest["shards"])
+        # default vacuum policy: explicit ctor arg > what the store manifest
+        # records (sharded stores) > keep-latest-only
+        if retention is None and manifest.get("retention"):
+            r = manifest["retention"]
+            retention = RetentionPolicy(
+                keep_versions=int(r.get("keep_versions", 1)),
+                ttl_s=r.get("ttl_s"))
+        self.retention = retention or RetentionPolicy()
+        self.spill_threshold = spill_threshold
+        # live snapshot pins: shared across every client of this physical
+        # store in the process, consumed by vacuum's retention horizon
+        self.leases = registry_for(lease_scope(object_store), root)
         self.router = ShardRouter(self.shards,
                                   manifest.get("router", ROUTER_ALGO))
         io = io or get_default_executor()
@@ -111,9 +139,13 @@ class DeltaTensorStore:
         # successful commits, filled on reads) — staleness-free by naming;
         # part-file names are uuid-unique, so one map covers all shards
         self._headers_by_path: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
-        # catalog_stats shows the O(1) metadata claim: `builds` counts full
-        # snapshot walks, `hits` counts reads served by a cached catalog
-        self.catalog_stats: Dict[str, int] = {"builds": 0, "hits": 0}
+        # catalog_stats shows the O(1) metadata claim: `builds` counts
+        # catalog constructions, `hits` reads served by a cached catalog,
+        # `snapshot_walks` shard sources resolved by an O(files) snapshot
+        # walk, `index_loads` sources resolved by a spilled catalog index
+        self.catalog_stats: Dict[str, int] = {"builds": 0, "hits": 0,
+                                              "snapshot_walks": 0,
+                                              "index_loads": 0}
         # commit_stats shows the scale-out claim: `commits` = landed shard
         # commits, `conflicts` = CommitConflicts observed by batches,
         # `retries` = rebased re-commit attempts (see WriteBatch)
@@ -137,36 +169,79 @@ class DeltaTensorStore:
 
     # -- catalog / handles ---------------------------------------------------
 
-    def _snapshots_at(self, version: VersionArg):
-        """One snapshot per shard, resolved concurrently on the executor."""
+    def _concrete_vector(self, version: VersionArg) -> Tuple[int, ...]:
+        """Resolve a user-facing ``version=`` to one concrete int per shard
+        (``None`` entries -> that shard's latest, probed concurrently)."""
         vv = resolve_version_vector(self.shards, version)
+        if all(v is not None for v in vv):
+            return tuple(int(v) for v in vv)
         if self.shards == 1:
-            return [self.tables[0].snapshot(vv[0])]
-        # fan the per-shard log replays out on the shared work pool: a
-        # cross-shard snapshot costs the makespan of N resolutions, not
-        # their sum
-        return self.io.map(lambda tv: tv[0].snapshot(tv[1]),
-                           list(zip(self.tables, vv)))
+            return (self.tables[0].version() if vv[0] is None else int(vv[0]),)
+        return tuple(self.io.map(
+            lambda tv: tv[0].version() if tv[1] is None else int(tv[1]),
+            list(zip(self.tables, vv))))
+
+    def _shard_source(self, shard: int, version: int) -> ShardSource:
+        """One shard's catalog source: spilled index if present, else walk.
+
+        A snapshot already replayed by this client is free — use it without
+        probing for an index. Otherwise try the one-get spilled index
+        (written at commit time past ``spill_threshold``); on miss, fall
+        back to the O(files) snapshot walk. The accounting feeds
+        ``catalog_stats['snapshot_walks'/'index_loads']``.
+        """
+        table = self.tables[shard]
+        if version < 0:
+            raise ObjectNotFoundError(f"no delta table at {table.path}")
+        snap = table.log.cached_snapshot(version)
+        if snap is not None:
+            return ShardSource(version=version, snapshot=snap)
+        if self.spill_threshold is not None:
+            try:
+                body = self.io.fetch(table.store,
+                                     catalog_index_key(table.path, version))
+            except ObjectNotFoundError:
+                pass
+            else:
+                self.catalog_stats["index_loads"] += 1
+                return ShardSource(version=version, index=json.loads(body))
+        self.catalog_stats["snapshot_walks"] += 1
+        return ShardSource(version=version, snapshot=table.snapshot(version))
 
     def catalog(self, version: VersionArg = None) -> Catalog:
         """The merged tensor index at ``version`` (latest if None).
 
         ``version`` is an int on 1-shard stores, a per-shard version vector
-        on sharded stores. O(1) when the vector is already cached.
+        on sharded stores. O(1) when the vector is already cached; a cold
+        build resolves each shard from its spilled catalog index when one
+        exists (one get), else by walking the snapshot.
         """
-        snaps = self._snapshots_at(version)
-        key = tuple(s.version for s in snaps)
+        key = self._concrete_vector(version)
         cat = self._catalogs.get(key)
         if cat is not None:
             self.catalog_stats["hits"] += 1
             self._catalogs.move_to_end(key)
             return cat
-        cat = Catalog(self, snaps)
+        if self.shards == 1:
+            sources = [self._shard_source(0, key[0])]
+        else:
+            sources = self.io.map(lambda sv: self._shard_source(*sv),
+                                  list(enumerate(key)))
+        cat = Catalog(self, sources)
         self.catalog_stats["builds"] += 1
         self._catalogs[key] = cat
         while len(self._catalogs) > MAX_CACHED_CATALOGS:
             self._catalogs.popitem(last=False)
         return cat
+
+    def lease(self, version: VersionArg = None) -> Lease:
+        """Pin ``version`` (latest if None) against vacuum until released.
+
+        The refcounted pin every :class:`TensorRef` takes implicitly,
+        exposed for holders that outlive any single ref — e.g. the
+        checkpointer retaining its last K checkpoints.
+        """
+        return self.leases.acquire(self._concrete_vector(version))
 
     def open(self, tid: str, *, version: VersionArg = None) -> TensorRef:
         """Lazy snapshot-pinned handle; fetches nothing until read."""
@@ -188,6 +263,138 @@ class DeltaTensorStore:
         while len(self._headers_by_path) > MAX_CACHED_HEADERS:
             self._headers_by_path.popitem(last=False)
 
+    # -- maintenance ---------------------------------------------------------
+
+    def _maybe_spill(self, shard: int, version: int,
+                     adds_hint: Optional[int] = None) -> bool:
+        """Spill the catalog index for a freshly committed shard version
+        when the snapshot has crossed ``spill_threshold`` files.
+
+        Cheap guard first: when the committer's previous snapshot is still
+        cached and ``adds_hint`` (how many files the commit added) proves
+        the threshold cannot have been crossed, skip without any replay —
+        small stores never pay a spill probe on their commit path.
+        """
+        if self.spill_threshold is None:
+            return False
+        table = self.tables[shard]
+        if adds_hint is not None:
+            prev = table.log.cached_snapshot(version - 1)
+            if prev is not None and \
+                    len(prev.files) + adds_hint < self.spill_threshold:
+                return False
+        snap = table.snapshot(version)
+        if len(snap.files) < self.spill_threshold:
+            return False
+        self._spill_index(table, snap)
+        return True
+
+    def _spill_index(self, table: DeltaTable, snap) -> None:
+        body = json.dumps(build_catalog_index(snap),
+                          separators=(",", ":")).encode("utf-8")
+        # plain put: content is deterministic per version, so a racing
+        # re-spill writes identical bytes — last writer wins harmlessly
+        table.store.put(catalog_index_key(table.path, snap.version), body)
+
+    def spill_catalog(self, version: VersionArg = None) -> List[str]:
+        """Force-write the per-shard catalog index at ``version`` (latest
+        if None), regardless of threshold; returns the keys written.
+        Operators use this to backfill indexes onto pre-existing tables."""
+        key = self._concrete_vector(version)
+        written = []
+        for shard, v in enumerate(key):
+            table = self.tables[shard]
+            self._spill_index(table, table.snapshot(v))
+            written.append(catalog_index_key(table.path, v))
+        return written
+
+    def _evict_headers(self, paths: Sequence[str]) -> None:
+        for p in paths:
+            self._headers_by_path.pop(p, None)
+
+    def compact(self) -> List[CompactResult]:
+        """OPTIMIZE every shard table (fanned out on the executor).
+
+        Compacted-away paths are evicted from the header and block caches —
+        their bytes survive until vacuum, but a stale cache entry must not
+        mask a storage-level problem. No-op shards commit nothing.
+        """
+        if self.shards == 1:
+            results = [self.tables[0].compact()]
+        else:
+            results = self.io.map(lambda t: t.compact(), self.tables)
+        for shard, res in enumerate(results):
+            if not res:
+                continue
+            table = self.tables[shard]
+            self._evict_headers(res.removed_paths)
+            table.io.invalidate(table.store,
+                                [f"{table.path}/{p}" for p in res.removed_paths])
+            self._maybe_spill(shard, res.version)
+        return results
+
+    def _retention_horizon(self, shard: int, latest: int,
+                           keep_versions: int,
+                           ttl_s: Optional[float]) -> int:
+        """Oldest version this shard must keep under the policy (leases are
+        added on top by the caller)."""
+        horizon = max(0, latest - (keep_versions - 1))
+        if ttl_s is not None:
+            cutoff = time.time() - ttl_s
+            log = self.tables[shard].log
+            v = horizon
+            while v > 0:
+                ts = log.commit_ts(v - 1)
+                if ts is None or ts < cutoff:
+                    break
+                v -= 1
+            horizon = v
+        return horizon
+
+    def vacuum(self, *, keep_versions: Optional[int] = None,
+               ttl_s: Optional[float] = None,
+               dry_run: bool = False) -> List[VacuumResult]:
+        """Delete files unreachable from any retained or leased snapshot.
+
+        Per shard, the retention horizon keeps the newest
+        ``keep_versions`` versions (default: the store's
+        :class:`~repro.core.leases.RetentionPolicy`) plus every version
+        younger than ``ttl_s``; versions pinned by live leases — every open
+        :class:`TensorRef`, every checkpoint retained by the checkpointer —
+        are kept whatever their age, so pinned reads and time travel within
+        the horizon keep working. Deleted paths are evicted from the block
+        and header caches, and catalogs cached for now-unreachable versions
+        are dropped. ``dry_run`` reports without deleting.
+        """
+        keep = self.retention.keep_versions if keep_versions is None \
+            else max(1, int(keep_versions))
+        ttl = self.retention.ttl_s if ttl_s is None else ttl_s
+
+        def one(shard: int) -> VacuumResult:
+            table = self.tables[shard]
+            latest = table.version()
+            horizon = self._retention_horizon(shard, latest, keep, ttl)
+            leased = self.leases.leased_versions(shard)
+            return table.vacuum(horizon=horizon,
+                                extra_versions=sorted(leased),
+                                dry_run=dry_run)
+
+        if self.shards == 1:
+            results = [one(0)]
+        else:
+            results = self.io.map(one, list(range(self.shards)))
+        if not dry_run:
+            for shard, res in enumerate(results):
+                self._evict_headers(res.deleted_paths)
+                # catalogs pinned outside this shard's retained set now
+                # reference deleted files — drop them from the cache
+                # (pop, not del: a concurrent reader may race the LRU)
+                retained = set(res.retained_versions)
+                for key in [k for k in self._catalogs
+                            if k[shard] not in retained]:
+                    self._catalogs.pop(key, None)
+        return results
+
     # -- write -------------------------------------------------------------
 
     def _resolve_tid(self, tensor: Any, layout: str,
@@ -206,12 +413,15 @@ class DeltaTensorStore:
     def _encode_and_upload(self, tensor: Any, *, layout: str,
                            tensor_id: str,
                            target_file_bytes: Optional[int] = None,
+                           guard=None,
                            **codec_params):
         """Encode + upload part files (no commit). ``layout``/``tensor_id``
         must already be resolved (see :meth:`_resolve_tid`). Returns
         ``(shard, add_actions, header_seed)`` where ``shard`` is the router-
         assigned shard the files were uploaded into and header_seed is
-        ``(path, columns)`` for post-commit caching, or None."""
+        ``(path, columns)`` for post-commit caching, or None. ``guard`` (an
+        :class:`~repro.lake.table.UploadGuard`) registers each upload so
+        concurrent vacuum spares the not-yet-committed files."""
         codec = get_codec(layout)
         tid = tensor_id
         shard = self.router.shard_of(tid)
@@ -228,7 +438,7 @@ class DeltaTensorStore:
             for lo in range(0, rows, per_file):
                 cols = _slice_columns(grp.columns, lo, min(rows, lo + per_file))
                 adds.append(table.append(
-                    cols, commit=False,
+                    cols, commit=False, guard=guard,
                     partition_values={"tensor": tid, "kind": grp.kind,
                                       "layout": layout}))
             if grp.kind == "header":
@@ -282,14 +492,17 @@ class DeltaTensorStore:
     # -- read (legacy eager wrappers over the handle API) --------------------
 
     def get(self, tid: str, *, version: VersionArg = None) -> np.ndarray:
-        return self.open(tid, version=version).read()
+        with self.open(tid, version=version) as ref:
+            return ref.read()
 
     def get_coo(self, tid: str, *, version: VersionArg = None) -> SparseCOO:
-        return self.open(tid, version=version).read_coo()
+        with self.open(tid, version=version) as ref:
+            return ref.read_coo()
 
     def get_slice(self, tid: str, slices: Sequence[Optional[Tuple[int, int]]], *,
                   version: VersionArg = None) -> np.ndarray:
-        return self.open(tid, version=version).read_slice(slices)
+        with self.open(tid, version=version) as ref:
+            return ref.read_slice(slices)
 
     # -- catalog conveniences -------------------------------------------------
 
@@ -297,10 +510,12 @@ class DeltaTensorStore:
         return self.catalog(version).tensors()
 
     def shape_of(self, tid: str, *, version: VersionArg = None) -> Tuple[int, ...]:
-        return self.open(tid, version=version).shape
+        with self.open(tid, version=version) as ref:
+            return ref.shape
 
     def tensor_bytes(self, tid: str, *, version: VersionArg = None) -> int:
-        return self.open(tid, version=version).nbytes
+        with self.open(tid, version=version) as ref:
+            return ref.nbytes
 
     def version(self) -> Union[int, Tuple[int, ...]]:
         """Latest version: an int (1-shard) or the per-shard version vector."""

@@ -1,9 +1,11 @@
 from .object_store import (InMemoryObjectStore, LatencyModel, LocalFSObjectStore,
                            ObjectNotFoundError, ObjectStore, PutIfAbsentError)
-from .log import CommitConflict, DeltaLog, Snapshot
+from .log import (CommitConflict, DeltaLog, Snapshot, catalog_index_key,
+                  catalog_index_version)
 from .io import (BlockCache, ReadExecutor, ReadStats, get_default_executor,
                  set_default_executor)
-from .table import DeltaTable, file_overlaps
+from .table import (CompactResult, DeltaTable, UploadGuard, VacuumResult,
+                    file_overlaps)
 from . import columnar
 
 __all__ = [
@@ -11,5 +13,6 @@ __all__ = [
     "ObjectNotFoundError", "PutIfAbsentError", "CommitConflict", "DeltaLog",
     "Snapshot", "DeltaTable", "file_overlaps", "columnar",
     "BlockCache", "ReadExecutor", "ReadStats", "get_default_executor",
-    "set_default_executor",
+    "set_default_executor", "CompactResult", "VacuumResult", "UploadGuard",
+    "catalog_index_key", "catalog_index_version",
 ]

@@ -49,6 +49,21 @@ def _store_token(store: Any) -> int:
     return tok
 
 
+def store_scope(store: Any) -> tuple:
+    """Stable in-process identity for one *physical* object store.
+
+    Filesystem-backed stores identify by their root path, so two
+    ``LocalFSObjectStore`` clients of the same directory compare equal —
+    cross-client coordination (snapshot leases, in-flight upload guards)
+    keys on this. Stores without a path identity fall back to per-instance
+    identity via the cache token.
+    """
+    root = getattr(store, "root", None)
+    if isinstance(root, str):
+        return ("fs", root)
+    return ("instance", _store_token(store))
+
+
 @dataclass
 class ReadStats:
     """Counters for the read path (thread-safe)."""
@@ -212,6 +227,18 @@ class ReadExecutor:
     def fetch_all(self, store: Any, keys: Sequence[str], *,
                   cacheable: bool = True) -> List[bytes]:
         return list(self.fetch_ordered(store, keys, cacheable=cacheable))
+
+    def invalidate(self, store: Any, keys: Sequence[str]) -> None:
+        """Evict cached blocks for ``keys`` of ``store``.
+
+        Data-file paths are immutable, so the cache normally never needs
+        invalidation — EXCEPT when maintenance deletes the objects
+        themselves: a vacuumed path must not keep serving from cache, or
+        the cache masks a read that would fail against the real store.
+        """
+        tok = _store_token(store)
+        for key in keys:
+            self.cache.invalidate((tok, key))
 
     # -- composite work ------------------------------------------------------
 

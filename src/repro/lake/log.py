@@ -26,9 +26,29 @@ from .object_store import ObjectStore, ObjectNotFoundError, PutIfAbsentError
 
 CHECKPOINT_INTERVAL = 10
 
+# spilled catalog indexes live beside (not inside) the delta log: one JSON
+# per spilled version, deterministic content, written after the commit —
+# see repro.core.catalog.build_catalog_index
+CATALOG_INDEX_DIR = "_catalog"
+
 
 def _log_key(table: str, version: int) -> str:
     return f"{table}/_delta_log/{version:020d}.json"
+
+
+def catalog_index_key(table: str, version: int) -> str:
+    return f"{table}/{CATALOG_INDEX_DIR}/{version:020d}.index.json"
+
+
+def catalog_index_version(table: str, key: str) -> Optional[int]:
+    """Inverse of :func:`catalog_index_key`; None for foreign keys."""
+    prefix = f"{table}/{CATALOG_INDEX_DIR}/"
+    if not (key.startswith(prefix) and key.endswith(".index.json")):
+        return None
+    try:
+        return int(key[len(prefix):-len(".index.json")])
+    except ValueError:
+        return None
 
 
 def _ckpt_key(table: str, version: int) -> str:
@@ -76,6 +96,9 @@ class DeltaLog:
         # highest version known to exist (None = never probed). Commit files
         # are append-only, so a cached floor only ever moves forward.
         self._latest: Optional[int] = None
+        # commit timestamps are immutable once written — cached for the
+        # TTL half of vacuum's retention policy
+        self._commit_ts: Dict[int, float] = {}
 
     # -- write side ---------------------------------------------------------
 
@@ -187,6 +210,34 @@ class DeltaLog:
                     best = v
         if best is not None:
             return json.loads(self.store.get(_ckpt_key(self.table, best)))
+        return None
+
+    def cached_snapshot(self, version: int) -> Optional[Snapshot]:
+        """Peek the snapshot cache — no I/O, None when never replayed."""
+        return self._snap_cache.get(version)
+
+    def commit_ts(self, version: int) -> Optional[float]:
+        """The ``commitInfo.ts`` of one version (None if unreadable).
+
+        One log-file get per uncached version; timestamps are immutable so
+        the answer is cached for the life of the client. Used by vacuum's
+        TTL retention ("keep every version younger than N seconds").
+        """
+        ts = self._commit_ts.get(version)
+        if ts is not None:
+            return ts
+        try:
+            body = self.store.get(_log_key(self.table, version)).decode("utf-8")
+        except ObjectNotFoundError:
+            return None
+        for line in body.splitlines():
+            if not line:
+                continue
+            action = json.loads(line)
+            info = action.get("commitInfo")
+            if info and "ts" in info:
+                self._commit_ts[version] = float(info["ts"])
+                return self._commit_ts[version]
         return None
 
     def snapshot(self, version: Optional[int] = None) -> Snapshot:

@@ -16,18 +16,108 @@ while batches decode in plan order as their bytes arrive.
 
 from __future__ import annotations
 
+import threading
 import uuid
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import columnar
-from .io import ReadExecutor, get_default_executor
-from .log import DeltaLog, Snapshot
-from .object_store import ObjectStore
+from .io import ReadExecutor, get_default_executor, store_scope
+from .log import (CommitConflict, DeltaLog, Snapshot, catalog_index_version)
+from .object_store import ObjectNotFoundError, ObjectStore
 
 # filter := {column: (lo, hi)} inclusive range; None bound = open
 Filters = Dict[str, Tuple[Optional[float], Optional[float]]]
+
+
+# in-flight two-phase uploads, per (store scope, table path) -> {rel path:
+# refcount}. A data file uploaded but not yet committed is referenced by NO
+# snapshot, so vacuum would reclassify it as an orphan and delete it out
+# from under the writer — the commit would then land referencing dead
+# paths. Writers (WriteBatch, compact) register their uploads here; vacuum
+# treats registered paths as live. In-process protection only: it shares
+# the lease model's scope (cross-process writers need an out-of-band
+# grace period, as in production Delta).
+_inflight_lock = threading.Lock()
+_inflight: Dict[Tuple[Any, str], Dict[str, int]] = {}
+
+
+class UploadGuard:
+    """Registers two-phase upload paths until the owning writer closes.
+
+    ``add`` BEFORE the object put (the path is chosen first), ``close``
+    after the commit lands (paths now live in a snapshot) or the writer
+    abandons (paths become vacuumable orphans). Idempotent close.
+    """
+
+    def __init__(self, key: Tuple[Any, str]):
+        self._key = key
+        self._paths: List[str] = []
+        self._closed = False
+
+    def add(self, path: str) -> None:
+        with _inflight_lock:
+            bucket = _inflight.setdefault(self._key, {})
+            bucket[path] = bucket.get(path, 0) + 1
+        self._paths.append(path)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        with _inflight_lock:
+            bucket = _inflight.get(self._key)
+            if bucket is None:
+                return
+            for p in self._paths:
+                n = bucket.get(p, 0) - 1
+                if n > 0:
+                    bucket[p] = n
+                else:
+                    bucket.pop(p, None)
+            if not bucket:
+                _inflight.pop(self._key, None)
+
+    def __enter__(self) -> "UploadGuard":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+
+def _inflight_paths(key: Tuple[Any, str]) -> set:
+    with _inflight_lock:
+        return set(_inflight.get(key, ()))
+
+
+@dataclass
+class CompactResult:
+    """What one OPTIMIZE pass did. Falsy when it was a no-op."""
+
+    files_compacted: int = 0            # input files rewritten away
+    files_written: int = 0              # merged files added
+    version: Optional[int] = None       # committed version (None = no commit)
+    removed_paths: List[str] = field(default_factory=list)
+
+    def __bool__(self) -> bool:
+        return self.files_compacted > 0
+
+
+@dataclass
+class VacuumResult:
+    """What one vacuum pass deleted (or would delete, under dry_run)."""
+
+    files_deleted: int = 0
+    bytes_reclaimed: int = 0
+    index_files_deleted: int = 0        # pruned _catalog/<v>.index.json files
+    deleted_paths: List[str] = field(default_factory=list)
+    retained_versions: List[int] = field(default_factory=list)
+    dry_run: bool = False
+
+    def __bool__(self) -> bool:
+        return self.files_deleted > 0
 
 
 def file_overlaps(add: Dict[str, Any], filters: Optional[Filters]) -> bool:
@@ -122,18 +212,28 @@ class DeltaTable:
 
     # -- write ----------------------------------------------------------------
 
+    def guard_uploads(self) -> UploadGuard:
+        """Guard for two-phase uploads: registered paths are treated as
+        live by concurrent (in-process) :meth:`vacuum` until closed."""
+        return UploadGuard((store_scope(self.store), self.path))
+
     def append(self, columns: Dict[str, Any], *, partition_values: Optional[Dict[str, str]] = None,
-               commit: bool = True) -> Dict[str, Any]:
+               commit: bool = True,
+               guard: Optional[UploadGuard] = None) -> Dict[str, Any]:
         """Write one parq-lite file; optionally defer the commit.
 
         With ``commit=False`` the data file is uploaded but invisible; the
         returned add-action must be passed to :meth:`commit_adds` later.
         This two-phase path is what the distributed checkpointer uses:
         every host uploads its shard files, then a single coordinator commit
-        makes the checkpoint atomic.
+        makes the checkpoint atomic. Pass a :meth:`guard_uploads` guard so
+        a concurrent vacuum cannot mistake the not-yet-committed file for
+        an orphan (registered before the first byte is uploaded).
         """
         data, stats = columnar.write_table(columns)
         fname = f"part-{uuid.uuid4().hex}.pql"
+        if guard is not None:
+            guard.add(fname)
         self.store.put(f"{self.path}/{fname}", data)
         add = {"path": fname, "size": len(data), "stats": stats,
                "partitionValues": partition_values or {}, "dataChange": True}
@@ -237,46 +337,118 @@ class DeltaTable:
 
     # -- maintenance -----------------------------------------------------------
 
-    def compact(self, max_rows_per_file: int = 1 << 20) -> int:
-        """Rewrite small files into bigger ones (single commit).
+    def compact(self, max_rows_per_file: int = 1 << 20, *,
+                max_retries: int = 3) -> CompactResult:
+        """Rewrite multi-file partition groups into one file each.
 
         Files are compacted **per partition group** so the rewritten
         add-actions keep their ``partitionValues`` — merging across
         partitions would silently break ``partition_filters`` pruning (and
         would fuse incompatible row schemas, e.g. tensor headers with chunk
         rows) after OPTIMIZE.
-        """
-        snap = self.log.snapshot()
-        groups: Dict[Tuple[Tuple[str, str], ...], List[Dict[str, Any]]] = {}
-        for add in snap.add_actions():
-            pv = add.get("partitionValues", {}) or {}
-            groups.setdefault(tuple(sorted(pv.items())), []).append(add)
-        if not groups:
-            return snap.version
-        new_adds, removes = [], []
-        for pv_items, adds in groups.items():
-            if len(adds) <= 1:
-                continue  # already one file for this partition
-            keys = [f"{self.path}/{a['path']}" for a in adds]
-            batches = [columnar.read_table(data)
-                       for data in self.io.fetch_ordered(self.store, keys)]
-            removes.extend(a["path"] for a in adds)
-            new_adds.append(self.append(_merge_batches(batches), commit=False,
-                                        partition_values=dict(pv_items)))
-        if not new_adds:
-            return snap.version
-        return self.commit_adds(new_adds, removes=removes, op="OPTIMIZE")
 
-    def vacuum(self) -> int:
-        """Delete unreferenced data files (expired by remove actions)."""
-        live = {a["path"] for a in self.files()}
-        n = 0
+        When no group has more than one file this is a **commit-free
+        no-op** returning a falsy result — maintenance crons must not grow
+        the log (and invalidate pinned version vectors) doing nothing.
+
+        The commit is **fenced** at the snapshot compact planned against:
+        a concurrent writer that lands first (e.g. deleting a tensor whose
+        files are being merged — re-adding them would resurrect it) forces
+        a re-plan from the fresh snapshot rather than a blind rebase.
+        Compact never deletes bytes; the rewritten-away files stay in the
+        object store for older snapshots until :meth:`vacuum`.
+        """
+        attempt = 0
+        with self.guard_uploads() as guard:
+            while True:
+                snap = self.log.snapshot()
+                groups: Dict[Tuple[Tuple[str, str], ...], List[Dict[str, Any]]] = {}
+                for add in snap.add_actions():
+                    pv = add.get("partitionValues", {}) or {}
+                    groups.setdefault(tuple(sorted(pv.items())), []).append(add)
+                new_adds: List[Dict[str, Any]] = []
+                removes: List[str] = []
+                for pv_items, adds in groups.items():
+                    if len(adds) <= 1:
+                        continue  # already one file for this partition
+                    keys = [f"{self.path}/{a['path']}" for a in adds]
+                    batches = [columnar.read_table(data)
+                               for data in self.io.fetch_ordered(self.store, keys)]
+                    removes.extend(a["path"] for a in adds)
+                    new_adds.append(self.append(
+                        _merge_batches(batches), commit=False,
+                        partition_values=dict(pv_items), guard=guard))
+                if not new_adds:
+                    return CompactResult()  # commit-free no-op
+                try:
+                    v = self.commit_adds(new_adds, removes=removes, op="OPTIMIZE",
+                                         expected_version=snap.version)
+                except CommitConflict:
+                    attempt += 1
+                    if attempt > max_retries:
+                        raise
+                    continue  # somebody landed first: re-plan on their snapshot
+                return CompactResult(files_compacted=len(removes),
+                                     files_written=len(new_adds), version=v,
+                                     removed_paths=removes)
+
+    def vacuum(self, *, horizon: Optional[int] = None,
+               extra_versions: Sequence[int] = (),
+               dry_run: bool = False) -> VacuumResult:
+        """Delete data files referenced by no retained snapshot.
+
+        ``horizon`` is the oldest version whose files must survive: every
+        file live at any version in ``[horizon, latest]`` — plus any
+        version in ``extra_versions`` (leased snapshots, whatever their
+        age) — is kept, so time travel to retained versions keeps working.
+        ``horizon=None`` keeps only the latest snapshot's files (the
+        classic vacuum). Orphans from crashed two-phase writers are
+        deleted (no snapshot references them) — but uploads a live
+        in-process writer has registered via :meth:`guard_uploads` are
+        treated as live: deleting them would corrupt the commit about to
+        reference them.
+
+        Deleted paths are evicted from the shared executor's block cache —
+        a vacuumed file must not keep serving from cache. Spilled catalog
+        indexes (``_catalog/<v>.index.json``) for non-retained versions
+        are pruned alongside their snapshots. With ``dry_run`` nothing is
+        deleted; the result reports what would be.
+        """
+        latest = self.log.latest_version()
+        if latest < 0:
+            return VacuumResult(dry_run=dry_run)
+        lo = latest if horizon is None else max(0, min(int(horizon), latest))
+        retained = set(range(lo, latest + 1))
+        retained.update(int(v) for v in extra_versions if 0 <= int(v) <= latest)
+        live: set = set()
+        for v in sorted(retained):
+            live.update(self.log.snapshot(v).files)
+        live |= _inflight_paths((store_scope(self.store), self.path))
+
+        res = VacuumResult(retained_versions=sorted(retained), dry_run=dry_run)
+        doomed: List[str] = []
         prefix = f"{self.path}/"
         for key in list(self.store.list(prefix)):
             rel = key[len(prefix):]
-            if rel.startswith("_delta_log/"):
+            if rel.startswith("_"):
+                # metadata trees (_delta_log/, _catalog/, manifests) are
+                # never data files; indexes are pruned separately below
+                iv = catalog_index_version(self.path, key)
+                if iv is not None and iv not in retained:
+                    doomed.append(key)
+                    res.index_files_deleted += 1
                 continue
             if rel not in live:
+                doomed.append(key)
+                res.files_deleted += 1
+                res.deleted_paths.append(rel)
+        for key in doomed:
+            try:
+                res.bytes_reclaimed += self.store.head(key)
+            except ObjectNotFoundError:
+                continue  # raced another vacuum
+            if not dry_run:
                 self.store.delete(key)
-                n += 1
-        return n
+        if not dry_run and doomed:
+            self.io.invalidate(self.store, doomed)
+        return res

@@ -1,0 +1,100 @@
+"""Maintenance CLI: compact / vacuum a tensor store without writing Python.
+
+    PYTHONPATH=src python -m repro.launch.gc --dir /data/lake --root tensors \
+        --compact --vacuum --keep-versions 3 [--ttl 86400] [--dry-run]
+
+Opens the store at ``<dir>/<root>`` (sharded or not — the store manifest
+decides), optionally OPTIMIZEs every shard, then vacuums with the retention
+horizon ``keep-versions``/``ttl`` computed per shard. Prints per-shard files
+and bytes reclaimed. ``--dry-run`` reports without deleting. ``--spill-index``
+backfills the spilled catalog index at the latest version (useful on tables
+that grew large before spilling existed).
+
+Leases protect only readers in *this* process; the horizon policy is what
+protects readers elsewhere — pick ``--keep-versions`` accordingly.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List, Optional
+
+from ..core import DeltaTensorStore
+from ..lake import LocalFSObjectStore
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{n}B"
+        n /= 1024
+    return f"{n}B"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compact/vacuum a Delta tensor store")
+    ap.add_argument("--dir", required=True,
+                    help="object-store root directory (LocalFSObjectStore)")
+    ap.add_argument("--root", default="tensor_store",
+                    help="store root key prefix inside --dir")
+    ap.add_argument("--compact", action="store_true",
+                    help="OPTIMIZE every shard before vacuuming")
+    ap.add_argument("--vacuum", action="store_true",
+                    help="delete files outside the retention horizon")
+    ap.add_argument("--keep-versions", type=int, default=None,
+                    help="retain the newest N versions per shard "
+                         "(default: the store's recorded/default policy)")
+    ap.add_argument("--ttl", type=float, default=None,
+                    help="also retain versions younger than TTL seconds")
+    ap.add_argument("--spill-index", action="store_true",
+                    help="write the spilled catalog index at latest version")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="report what vacuum would delete; change nothing")
+    args = ap.parse_args(argv)
+
+    if not (args.compact or args.vacuum or args.spill_index):
+        ap.error("nothing to do: pass --compact, --vacuum and/or --spill-index")
+    if args.dry_run and args.compact:
+        print("[gc] --dry-run: skipping compact (it would commit)")
+    if args.dry_run and args.spill_index:
+        print("[gc] --dry-run: skipping --spill-index (it would write "
+              "index files)")
+
+    store = DeltaTensorStore(LocalFSObjectStore(args.dir), args.root)
+    print(f"[gc] store {args.root!r}: {store.shards} shard(s), "
+          f"version {store.version()}")
+
+    if args.compact and not args.dry_run:
+        for shard, res in enumerate(store.compact()):
+            if res:
+                print(f"[gc] shard {shard}: compacted {res.files_compacted} "
+                      f"files -> {res.files_written} (v{res.version})")
+            else:
+                print(f"[gc] shard {shard}: compact no-op (commit-free)")
+
+    if args.spill_index and not args.dry_run:
+        for key in store.spill_catalog():
+            print(f"[gc] spilled catalog index: {key}")
+
+    if args.vacuum:
+        results = store.vacuum(keep_versions=args.keep_versions,
+                               ttl_s=args.ttl, dry_run=args.dry_run)
+        verb = "would delete" if args.dry_run else "deleted"
+        total_files = total_bytes = 0
+        for shard, res in enumerate(results):
+            total_files += res.files_deleted
+            total_bytes += res.bytes_reclaimed
+            print(f"[gc] shard {shard}: {verb} {res.files_deleted} files "
+                  f"(+{res.index_files_deleted} indexes), "
+                  f"{_fmt_bytes(res.bytes_reclaimed)}; retained versions "
+                  f"{res.retained_versions[0]}..{res.retained_versions[-1]}"
+                  if res.retained_versions else
+                  f"[gc] shard {shard}: empty table")
+        print(f"[gc] total: {verb} {total_files} files, "
+              f"{_fmt_bytes(total_bytes)} reclaimed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

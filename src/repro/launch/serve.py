@@ -31,6 +31,10 @@ def main() -> None:
     ap.add_argument("--ckpt-shards", type=int, default=None,
                     help="shard count for the checkpoint store (fixed at "
                          "store-create time; omit to use what exists)")
+    ap.add_argument("--ckpt-gc-keep", type=int, default=None,
+                    help="after the restore completes, prune checkpoints "
+                         "beyond the newest N and vacuum the reclaimed "
+                         "bytes")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
@@ -53,6 +57,12 @@ def main() -> None:
                 trainer.init_state(cfg, jax.random.key(args.seed)))
             params = state.params
             print(f"[serve] restored params from checkpoint step {step}")
+            if args.ckpt_gc_keep is not None:
+                gc = ckpt.gc(keep=args.ckpt_gc_keep)
+                print(f"[serve] checkpoint gc: pruned steps "
+                      f"{gc['pruned_steps']}, reclaimed "
+                      f"{gc['bytes_reclaimed']} bytes "
+                      f"({gc['files_deleted']} files)")
 
     extra = {}
     if cfg.family == "vlm":

@@ -19,6 +19,11 @@ Features aimed at the 1000-node posture:
   background thread, overlapping the next train steps; ``wait()`` joins.
 * **time travel / retention**: every checkpoint is a table version;
   ``restore(step=...)`` replays the manifest for that step.
+  ``keep_checkpoints=K`` holds a snapshot **lease** on the last K saved
+  versions, so ``store.vacuum()`` (run by anyone sharing the store) can
+  reclaim older churn without ever breaking a restorable checkpoint;
+  :meth:`prune` + :meth:`gc` actively delete checkpoints beyond the last K
+  (respecting incremental chunk reuse) and vacuum the freed bytes.
 """
 
 from __future__ import annotations
@@ -31,6 +36,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from ..core.leases import Lease
 from ..core.store import DeltaTensorStore
 from ..dist.sharding import _path_str
 from ..lake import ObjectStore
@@ -47,7 +53,8 @@ def _leaf_hash(x: np.ndarray) -> str:
 class DeltaCheckpointer:
     def __init__(self, object_store: ObjectStore, root: str = "checkpoints", *,
                  chunk_dims: Optional[int] = None,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None,
+                 keep_checkpoints: Optional[int] = None):
         # shards=N scales concurrent-writer commit throughput: param leaves
         # hash across N independent commit domains, so many hosts
         # checkpointing into one logical store stop racing a single delta
@@ -55,6 +62,11 @@ class DeltaCheckpointer:
         # `restore` discovery below scans one table regardless of N.
         self.store = DeltaTensorStore(object_store, root, shards=shards)
         self.chunk_dims = chunk_dims
+        # keep_checkpoints=K: lease the last K committed checkpoint versions
+        # so concurrent store.vacuum() never deletes a restorable step —
+        # retention by lease, not by "never vacuum the checkpoint store"
+        self.keep_checkpoints = keep_checkpoints
+        self._ckpt_leases: List[Tuple[int, Lease]] = []  # (step, lease), oldest first
         self._last_hashes: Dict[str, Tuple[str, str]] = {}  # leaf -> (hash, tid)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -85,6 +97,12 @@ class DeltaCheckpointer:
         # only a committed checkpoint may update the incremental-skip state;
         # a failed batch must not make the next save skip an upload
         self._last_hashes.update(new_hashes)
+        if self.keep_checkpoints is not None:
+            # lease the committed version (vector) and slide the window
+            self._ckpt_leases.append((step, self.store.lease(batch.version)))
+            while len(self._ckpt_leases) > self.keep_checkpoints:
+                _, old = self._ckpt_leases.pop(0)
+                old.release()
 
     def save(self, step: int, state: Any) -> None:
         leaves = [( _path_str(p), np.asarray(x))
@@ -123,10 +141,19 @@ class DeltaCheckpointer:
             out.extend(int(s) for s in np.asarray(batch["step"]))
         return sorted(set(out))
 
-    def _manifest(self, step: Optional[int]) -> Tuple[int, Dict[str, str]]:
+    def _pinned_version(self, step: Optional[int]):
+        """The version vector our retention lease pinned for ``step``
+        (None when we hold no live lease for it)."""
+        for s, lease in self._ckpt_leases:
+            if s == step and not lease.released:
+                return lease.version_vector
+        return None
+
+    def _manifest(self, step: Optional[int], *,
+                  version: Optional[int] = None) -> Tuple[int, Dict[str, str]]:
         best: Tuple[int, Dict[str, str]] = (-1, {})
         for batch in self.store.table.scan(
-                partition_filters={"kind": "ckpt_manifest"}):
+                partition_filters={"kind": "ckpt_manifest"}, version=version):
             for s, blob in zip(np.asarray(batch["step"]), batch["manifest"]):
                 s = int(s)
                 if (step is None and s > best[0]) or (step is not None and s == step):
@@ -141,12 +168,19 @@ class DeltaCheckpointer:
 
         shard_slices: optional {leaf_path: slice spec} — restore only this
         host's shard via slice reads (elastic restore on a new mesh).
+
+        A step we hold a retention lease for restores against its *pinned*
+        version vector: even if another maintenance actor pruned the step
+        from the latest snapshot, the leased snapshot's manifest row and
+        chunk files are vacuum-protected and the restore still succeeds.
         """
-        step_found, manifest = self._manifest(step)
+        pinned = self._pinned_version(step) if step is not None else None
+        step_found, manifest = self._manifest(
+            step, version=None if pinned is None else pinned[0])
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         # every leaf ref comes from ONE catalog snapshot (consistent restore
         # even under concurrent writers) and resolves as a parallel future
-        catalog = self.store.catalog()
+        catalog = self.store.catalog(pinned)
         futures = []
         for path, leaf in flat:
             name = _path_str(path)
@@ -165,3 +199,89 @@ class DeltaCheckpointer:
             return True
         except KeyError:
             return False
+
+    # -- retention / maintenance ----------------------------------------------
+
+    def _manifest_files(self) -> List[Tuple[str, List[int], Dict[int, Dict[str, str]]]]:
+        """Each manifest data file with the steps it holds and their
+        manifests. One file per save normally; compact can merge several."""
+        table = self.store.table
+        adds = table.plan_scan(partition_filters={"kind": "ckpt_manifest"})
+        out = []
+        for add, batch in zip(adds, table.fetch_adds(adds)):
+            steps = [int(s) for s in np.asarray(batch["step"])]
+            manifests = {int(s): json.loads(bytes(blob))
+                         for s, blob in zip(np.asarray(batch["step"]),
+                                            batch["manifest"])}
+            out.append((add["path"], steps, manifests))
+        return out
+
+    def prune(self, keep: Optional[int] = None) -> List[int]:
+        """Delete checkpoints beyond the newest ``keep`` steps.
+
+        Tensors still referenced by a kept step's manifest (incremental
+        saves re-point unchanged leaves at older tids) are never deleted.
+        Manifest files whose every step is pruned are removed from the log;
+        files mixing kept and pruned steps are kept whole (conservative —
+        only possible after a compact merged manifest rows). Leases held
+        for pruned steps are released so vacuum can reclaim the bytes.
+        Returns the pruned step numbers.
+        """
+        keep = self.keep_checkpoints if keep is None else int(keep)
+        if keep is None or keep < 1:
+            raise ValueError("prune needs keep >= 1 (or keep_checkpoints set)")
+        files = self._manifest_files()
+        all_steps = sorted({s for _, steps, _ in files for s in steps})
+        if len(all_steps) <= keep:
+            return []
+        kept = set(all_steps[-keep:])
+        referenced = {tid for _, _, m in files for s, man in m.items()
+                      if s in kept for tid in man.values()}
+        doomed_tids = sorted({tid for _, _, m in files for s, man in m.items()
+                              if s not in kept for tid in man.values()}
+                             - referenced)
+        if doomed_tids:
+            with self.store.batch(op=f"PRUNE CHECKPOINTS keep={keep}") as b:
+                for tid in doomed_tids:
+                    b.delete(tid, missing_ok=True)
+        doomed_paths = [p for p, steps, _ in files
+                        if steps and all(s not in kept for s in steps)]
+        if doomed_paths:
+            self.store.table.commit_adds([], removes=doomed_paths,
+                                         op="PRUNE MANIFESTS")
+        # re-pin surviving leases to the post-prune latest: the old pins
+        # reference snapshots that still include the pruned steps' files,
+        # which would keep vacuum from reclaiming anything. Every kept
+        # step's manifest and tensors are live at latest, so the fresh pin
+        # protects exactly what prune kept.
+        survivors = []
+        for s, lease in self._ckpt_leases:
+            if s in kept:
+                survivors.append((s, self.store.lease()))
+            lease.release()
+        self._ckpt_leases = survivors
+        return [s for s in all_steps if s not in kept]
+
+    def gc(self, keep: Optional[int] = None, *,
+           dry_run: bool = False) -> Dict[str, Any]:
+        """Prune + compact + vacuum the checkpoint store in one call.
+
+        With ``dry_run`` nothing is committed or deleted; the vacuum half
+        reports what a real run would reclaim *under current leases*.
+        """
+        keep = self.keep_checkpoints if keep is None else keep
+        pruned: List[int] = []
+        compact = []
+        if not dry_run:
+            if keep is not None:
+                pruned = self.prune(keep)
+            compact = self.store.compact()
+        vacuum = self.store.vacuum(dry_run=dry_run)
+        return {
+            "pruned_steps": pruned,
+            "files_compacted": sum(r.files_compacted for r in compact),
+            "files_deleted": sum(r.files_deleted for r in vacuum),
+            "bytes_reclaimed": sum(r.bytes_reclaimed for r in vacuum),
+            "compact": compact,
+            "vacuum": vacuum,
+        }
