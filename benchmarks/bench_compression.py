@@ -1,0 +1,159 @@
+"""Chunk-blob compression: space reduction vs read-makespan cost.
+
+The paper's headline claim is space efficiency; this bench measures what
+the :mod:`repro.lake.compression` subsystem buys on the modeled object
+store (1 Gbps, 10 ms RTT, virtual clock) and what it costs at read time.
+
+Two dense-float workloads, stored FTSF across ~8 part files each:
+
+* **compressible** — float32 with quantized mantissas (the profile of
+  weights trained with reduced effective precision, or any telemetry
+  rounded for storage). This is the gated workload: ``zlib+shuffle``
+  must keep a >=2x physical-byte reduction vs the raw tensor bytes, and
+  the full-read makespan (modeled I/O + real decode CPU) must stay
+  within 25% of the uncompressed store's.
+* **random** — i.i.d. normal float32, the adversarial case. Plain zlib
+  cannot shrink it 10% (so the legacy layout stores it raw); the
+  byte-shuffle filter still finds the low-entropy exponent/sign planes.
+  Reported for context, not gated.
+
+Honesty note: the pre-compression layout already ran opportunistic
+per-block zlib inside parq-lite, so ``reduction_vs_legacy`` (what this
+subsystem adds on top of that) is reported alongside ``reduction``
+(physical vs raw tensor bytes, the gated number). Bytes-over-wire are
+charged by the store at the *stored* size, so the modeled read I/O shows
+the bandwidth win with zero hand-waving.
+
+With ``--json`` (or :func:`run`'s ``json_path``) results land in
+``BENCH_compression.json`` so ``check_regression.py`` can gate PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import DeltaTensorStore
+from repro.lake import ReadExecutor, available_codecs
+
+from .common import fresh_store, row
+
+SHAPE = (64, 128, 256)          # 8 MiB float32, 64 FTSF chunks
+TARGET_FILE_BYTES = 1 << 20     # ~8 part files -> width-8 parallel fetch
+WIDTH = 8
+GATED_SPEC = "zlib+shuffle"
+
+
+def _make(kind: str) -> np.ndarray:
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(SHAPE)
+    if kind == "compressible":
+        x = np.round(x * 64) / 64  # quantized mantissas
+    return x.astype(np.float32)
+
+
+def _data_bytes(obj, root: str) -> int:
+    return sum(obj.head(k) for k in obj.list(f"{root}/")
+               if "_delta_log" not in k and "_store_manifest" not in k)
+
+
+def _specs():
+    specs = [None, "zlib", GATED_SPEC, "lzma+shuffle"]
+    for extra in ("zstd", "lz4"):
+        if extra in available_codecs():
+            specs.append(f"{extra}+shuffle")
+    return specs
+
+
+def one_codec(x: np.ndarray, spec):
+    """Write + cold-read ``x`` under ``spec``; return space + time costs."""
+    obj, lm = fresh_store(parallelism=WIDTH)
+    io = ReadExecutor(max_workers=WIDTH, cache_bytes=0)
+    try:
+        store = DeltaTensorStore(obj, "tensors", io=io, compression=spec)
+        t0 = time.perf_counter()
+        store.put(x, layout="ftsf", tensor_id="t",
+                  target_file_bytes=TARGET_FILE_BYTES)
+        write_cpu = time.perf_counter() - t0
+
+        physical = _data_bytes(obj, "tensors")
+        stats = store.storage_stats()
+
+        store.get("t")  # warmup: first-call numpy/zlib overhead must not
+        best = None     # land on whichever codec happens to run first
+        for _ in range(3):  # best-of-3: CPU timing on shared boxes is noisy
+            lm.reset()
+            t0 = time.perf_counter()
+            got = store.get("t")
+            cpu = time.perf_counter() - t0
+            total = cpu + lm.elapsed_s
+            if best is None or total < best["total_s"]:
+                best = {"cpu_s": cpu, "io_s": lm.elapsed_s, "total_s": total,
+                        "requests": lm.requests, "bytes_moved": lm.bytes_moved}
+        assert np.array_equal(got, x)
+
+        return {
+            "spec": spec or "none",
+            "physical_bytes": physical,
+            "logical_bytes": int(x.nbytes),
+            "reduction": x.nbytes / physical,
+            "stats_ratio": stats["ratio"],
+            "write_cpu_s": write_cpu,
+            "read": best,
+        }
+    finally:
+        io.shutdown()
+
+
+def run(json_path=None):
+    """Run both workloads across available codecs; emit rows + JSON."""
+    results = {"bench": "compression",
+               "workloads": {"shape": list(SHAPE), "dtype": "float32",
+                             "logical_bytes": int(np.prod(SHAPE)) * 4},
+               "codecs": {}}
+    lines = []
+
+    for kind in ("compressible", "random"):
+        x = _make(kind)
+        per = {}
+        for spec in _specs():
+            r = one_codec(x, spec)
+            per[r["spec"]] = r
+            lines.append(row(
+                f"compression_{kind}_{r['spec']}",
+                r["read"]["total_s"] * 1e6,
+                f"reduction={r['reduction']:.2f}x "
+                f"wire={r['read']['bytes_moved']}B "
+                f"io_s={r['read']['io_s']:.4f} cpu_s={r['read']['cpu_s']:.4f}"))
+        legacy = per["none"]
+        for r in per.values():
+            r["reduction_vs_legacy"] = \
+                legacy["physical_bytes"] / r["physical_bytes"]
+            r["read_makespan_ratio"] = \
+                r["read"]["total_s"] / legacy["read"]["total_s"]
+        results["codecs"][kind] = per
+
+    gated = results["codecs"]["compressible"][GATED_SPEC]
+    results["gate"] = {
+        "spec": GATED_SPEC,
+        "reduction": gated["reduction"],
+        "reduction_vs_legacy": gated["reduction_vs_legacy"],
+        "read_makespan_ratio": gated["read_makespan_ratio"],
+    }
+    lines.append(row("compression_gate", 0.0,
+                     f"{GATED_SPEC}: reduction={gated['reduction']:.2f}x "
+                     f"(vs_legacy={gated['reduction_vs_legacy']:.2f}x) "
+                     f"read_overhead={gated['read_makespan_ratio']:.2f}"))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(json_path="BENCH_compression.json"):
+        print(line)

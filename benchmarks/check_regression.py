@@ -16,7 +16,12 @@ configuration lost a write. Gated metrics:
   after the churn workload (also hard-floored at 0.50 regardless of
   baseline), modeled-I/O speedup of a spilled-index catalog build over a
   snapshot walk, and the invariant that the spilled build performed zero
-  snapshot walks.
+  snapshot walks;
+* ``BENCH_compression.json`` — physical-byte reduction of the
+  ``zlib+shuffle`` chunk-blob codec on the compressible dense-float
+  workload (also hard-floored at 2.0x vs raw tensor bytes), and the
+  invariant that the compressed store's full-read makespan stays within
+  25% of the uncompressed store's.
 
 Improvements never fail the gate; commit a refreshed baseline JSON when a
 PR deliberately moves a metric.
@@ -40,10 +45,14 @@ GATES = [
      lambda d: float(d["churn"]["reclaimed_frac"])),
     ("BENCH_maintenance.json", "spilled-index catalog build io speedup",
      lambda d: float(d["catalog"]["speedup_io"])),
+    ("BENCH_compression.json", "zlib+shuffle physical reduction",
+     lambda d: float(d["gate"]["reduction"])),
 ]
 
 # invariants checked on the fresh run only (no baseline comparison)
 MIN_RECLAIMED_FRAC = 0.50
+MIN_COMPRESSION_REDUCTION = 2.0       # vs raw tensor bytes (acceptance)
+MAX_COMPRESSED_READ_OVERHEAD = 1.25   # full-read makespan vs uncompressed
 
 
 def _load(path: str) -> dict:
@@ -98,6 +107,22 @@ def main(argv=None) -> int:
     if frac >= MIN_RECLAIMED_FRAC and walks == 0:
         print(f"[OK] churn reclaim {frac:.2f} >= {MIN_RECLAIMED_FRAC:.2f}; "
               f"spilled catalog build walked 0 snapshots")
+
+    comp = _load(os.path.join(args.fresh, "BENCH_compression.json"))
+    reduction = float(comp["gate"]["reduction"])
+    overhead = float(comp["gate"]["read_makespan_ratio"])
+    if reduction < MIN_COMPRESSION_REDUCTION:
+        print(f"[REGRESSION] compression reduction {reduction:.2f}x "
+              f"< hard floor {MIN_COMPRESSION_REDUCTION:.2f}x")
+        failures.append("compression reduction floor")
+    if overhead > MAX_COMPRESSED_READ_OVERHEAD:
+        print(f"[REGRESSION] compressed full-read makespan {overhead:.2f}x "
+              f"uncompressed > ceiling {MAX_COMPRESSED_READ_OVERHEAD:.2f}x")
+        failures.append("compressed read overhead ceiling")
+    if reduction >= MIN_COMPRESSION_REDUCTION and \
+            overhead <= MAX_COMPRESSED_READ_OVERHEAD:
+        print(f"[OK] compression: {reduction:.2f}x reduction at "
+              f"{overhead:.2f}x read makespan")
 
     if failures:
         print(f"FAIL: {len(failures)} gate(s) regressed: "

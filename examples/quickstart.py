@@ -16,7 +16,8 @@ from repro.lake import InMemoryObjectStore, LatencyModel
 
 def main():
     lm = LatencyModel()                      # modeled 1 Gbps object store
-    store = DeltaTensorStore(InMemoryObjectStore(latency=lm), "tensors")
+    store = DeltaTensorStore(InMemoryObjectStore(latency=lm), "tensors",
+                             compression="zlib+shuffle")  # chunk-blob codec
 
     # --- dense tensor -> FTSF (the 10% rule picks it automatically) -------
     dense = np.random.default_rng(0).standard_normal((64, 3, 32, 32)).astype(
@@ -68,6 +69,12 @@ def main():
     print(f"\ntime travel: a ref pinned at v{v} still serves the original")
     print("tensors in store:", [t for t, _ in store.list_tensors()])
     print("catalog metadata work:", store.catalog_stats)
+
+    # --- space accounting: logical vs physical bytes, per codec -----------
+    st = store.storage_stats()
+    print(f"storage: {st['physical_bytes']/1e3:.1f} kB physical / "
+          f"{st['logical_bytes']/1e3:.1f} kB logical "
+          f"({st['ratio']:.2f}x, default codec {st['compression']!r})")
 
 
 if __name__ == "__main__":

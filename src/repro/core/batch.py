@@ -44,7 +44,7 @@ DEFAULT_COMMIT_RETRIES = 10
 
 
 class BatchClosedError(RuntimeError):
-    pass
+    """Raised when staging into an already committed/abandoned batch."""
 
 
 def _tensor_paths(snapshot: Snapshot) -> Dict[str, List[str]]:
@@ -123,8 +123,15 @@ class WriteBatch:
 
     def put(self, tensor: Any, *, layout: str = "auto",
             tensor_id: Optional[str] = None, overwrite: bool = False,
-            target_file_bytes: Optional[int] = None, **codec_params) -> str:
-        """Stage one tensor; returns its id. Files upload now, commit later."""
+            target_file_bytes: Optional[int] = None,
+            compression: Optional[str] = None, **codec_params) -> str:
+        """Stage one tensor; returns its id. Files upload now, commit later.
+
+        ``compression`` overrides the store's default chunk-blob codec for
+        this tensor (a spec like ``"zlib+shuffle"``; ``None`` = default).
+        Raises ``ValueError`` on duplicate staging or an existing id
+        without ``overwrite`` — checked before any byte is uploaded.
+        """
         self._check_open()
         layout, tid = self._store._resolve_tid(tensor, layout, tensor_id)
         # all checks run BEFORE any byte uploads: a rejected put must not
@@ -139,6 +146,7 @@ class WriteBatch:
             tensor, layout=layout, tensor_id=tid,
             target_file_bytes=target_file_bytes,
             guard=self._guard(self._store.router.shard_of(tid)),
+            compression=compression,
             **codec_params)
         self._ops.append({"kind": "put", "shard": shard, "tid": tid,
                           "adds": adds, "removes": sorted(existing)})
@@ -190,6 +198,7 @@ class WriteBatch:
 
     @property
     def staged(self) -> List[str]:
+        """Tensor ids staged by :meth:`put` so far, in staging order."""
         return list(self._staged_tids)
 
     @property

@@ -102,11 +102,14 @@ class TensorEntry:
 
     @property
     def nbytes(self) -> int:
+        """Stored bytes across this tensor's files (compressed size for
+        frame-compressed files — what the object store actually holds)."""
         return (sum(a["size"] for a in self.header_adds) +
                 sum(a["size"] for a in self.chunk_adds))
 
     @property
     def paths(self) -> List[str]:
+        """Relative file paths of every header + chunk add-action."""
         return [a["path"] for a in self.header_adds + self.chunk_adds]
 
 
@@ -175,6 +178,7 @@ class Catalog:
 
     @property
     def n_shards(self) -> int:
+        """How many shard snapshots this catalog merges (1 if unsharded)."""
         return len(self._versions)
 
     def table_for(self, shard: int):
@@ -195,6 +199,8 @@ class Catalog:
         return sorted((t, e.layout) for t, e in self._entries.items())
 
     def entry(self, tid: str) -> TensorEntry:
+        """The tensor's add-action grouping; raises ``KeyError`` with the
+        pinned version in the message when ``tid`` is absent."""
         try:
             return self._entries[tid]
         except KeyError:
@@ -223,6 +229,7 @@ class Catalog:
     # -- handles ---------------------------------------------------------------
 
     def open(self, tid: str) -> "TensorRef":
+        """A lazy :class:`TensorRef` pinned to this catalog's snapshot."""
         return TensorRef(self, self.entry(tid))
 
 
@@ -265,6 +272,7 @@ class TensorRef:
 
     @property
     def closed(self) -> bool:
+        """Whether the snapshot lease has been released."""
         return not self._finalizer.alive
 
     def __enter__(self) -> "TensorRef":
@@ -277,10 +285,12 @@ class TensorRef:
 
     @property
     def tensor_id(self) -> str:
+        """The stored tensor's id."""
         return self._entry.tensor_id
 
     @property
     def layout(self) -> str:
+        """Storage codec name (ftsf/coo/csr/csf/bsgs)."""
         return self._entry.layout
 
     @property
@@ -295,18 +305,22 @@ class TensorRef:
 
     @property
     def header(self) -> Dict[str, Any]:
+        """Parsed 1-row header columns (cached per snapshot)."""
         return self._catalog.header(self.tensor_id)
 
     @property
     def shape(self) -> Tuple[int, ...]:
+        """Dense shape, from the header only (no chunk fetches)."""
         return header_shape(self.header)
 
     @property
     def dtype(self) -> np.dtype:
+        """Element dtype, from the header only (no chunk fetches)."""
         return header_dtype(self.header)
 
     @property
     def ndim(self) -> int:
+        """Tensor rank."""
         return len(self.shape)
 
     @property
@@ -316,10 +330,12 @@ class TensorRef:
 
     @property
     def n_chunk_files(self) -> int:
+        """How many chunk data files back this tensor at this snapshot."""
         return len(self._entry.chunk_adds)
 
     @property
     def codec(self):
+        """The layout's :class:`~repro.core.encodings.base.Codec`."""
         return get_codec(self.layout)
 
     def __repr__(self) -> str:
@@ -416,4 +432,5 @@ class TensorRef:
         return io.submit(self.read_slice, slices)
 
     def read_coo_async(self) -> "Future[SparseCOO]":
+        """Future of :meth:`read_coo` on the executor work pool."""
         return self._catalog._store.io.submit(self.read_coo)

@@ -24,12 +24,16 @@ import numpy as np
 
 
 class DeviceCOO(NamedTuple):
+    """Fixed-capacity on-device COO carrier (padding = index == size)."""
+
     flat_indices: jax.Array  # (capacity,) int32/int64; == size => padding
     values: jax.Array        # (capacity,)
     nnz: jax.Array           # () int32, clamped to capacity
 
 
 class DeviceBlocks(NamedTuple):
+    """Fixed-capacity on-device block-sparse carrier (BSGS)."""
+
     block_ids: jax.Array     # (capacity,) flattened block-grid ids; == n_blocks => pad
     blocks: jax.Array        # (capacity, block_elems)
     count: jax.Array         # () int32
@@ -42,6 +46,7 @@ class DeviceBlocks(NamedTuple):
 
 @partial(jax.jit, static_argnames=("capacity",))
 def coo_encode(x: jax.Array, capacity: int) -> DeviceCOO:
+    """Dense -> fixed-capacity COO (extra non-zeros are truncated)."""
     flat = x.reshape(-1)
     size = flat.shape[0]
     idx = jnp.flatnonzero(flat != 0, size=capacity, fill_value=size)
@@ -52,6 +57,7 @@ def coo_encode(x: jax.Array, capacity: int) -> DeviceCOO:
 
 @partial(jax.jit, static_argnames=("shape",))
 def coo_decode(coo: DeviceCOO, shape: Tuple[int, ...]) -> jax.Array:
+    """COO -> dense of ``shape`` (padding entries dropped)."""
     size = math.prod(shape)
     flat = jnp.zeros((size,), dtype=coo.values.dtype)
     # mode="drop" discards the out-of-range padding entries
@@ -86,6 +92,7 @@ def blockify(x: jax.Array, block_shape: Sequence[int]) -> jax.Array:
 
 def unblockify(blocks: jax.Array, shape: Sequence[int],
                block_shape: Sequence[int]) -> jax.Array:
+    """Inverse of :func:`blockify`; crops the zero padding back off."""
     bs = tuple(block_shape)
     grid, inter, perm = _block_view_shape(shape, bs)
     inv = np.argsort(perm)
@@ -101,6 +108,7 @@ def unblockify(blocks: jax.Array, shape: Sequence[int],
 
 @partial(jax.jit, static_argnames=("block_shape", "capacity"))
 def bsgs_encode(x: jax.Array, block_shape: Tuple[int, ...], capacity: int) -> DeviceBlocks:
+    """Keep every non-zero block, up to ``capacity`` (exact encoding)."""
     bv = blockify(x, block_shape)
     n_blocks = bv.shape[0]
     nonzero = jnp.any(bv != 0, axis=1)
@@ -114,6 +122,7 @@ def bsgs_encode(x: jax.Array, block_shape: Tuple[int, ...], capacity: int) -> De
 @partial(jax.jit, static_argnames=("shape", "block_shape"))
 def bsgs_decode(db: DeviceBlocks, shape: Tuple[int, ...],
                 block_shape: Tuple[int, ...]) -> jax.Array:
+    """Scatter kept blocks back into a dense tensor of ``shape``."""
     grid, _, _ = _block_view_shape(shape, block_shape)
     n_blocks = math.prod(grid)
     bv = jnp.zeros((n_blocks, db.blocks.shape[1]), dtype=db.blocks.dtype)
@@ -128,6 +137,7 @@ def bsgs_decode(db: DeviceBlocks, shape: Tuple[int, ...],
 
 @partial(jax.jit, static_argnames=("block_shape", "k"))
 def bsgs_topk(x: jax.Array, block_shape: Tuple[int, ...], k: int) -> DeviceBlocks:
+    """Lossy top-k: keep the k highest-energy blocks (grad compression)."""
     bv = blockify(x, block_shape)
     norms = jnp.sum(jnp.square(bv.astype(jnp.float32)), axis=1)
     _, ids = jax.lax.top_k(norms, k)

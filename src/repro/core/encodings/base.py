@@ -31,37 +31,44 @@ class SparseCOO:
 
     @property
     def nnz(self) -> int:
+        """Number of stored (non-zero) entries."""
         return len(self.values)
 
     @property
     def ndim(self) -> int:
+        """Tensor rank."""
         return len(self.shape)
 
     @property
     def density(self) -> float:
+        """nnz / total elements (0.0 for zero-size shapes)."""
         total = int(np.prod(self.shape))
         return self.nnz / total if total else 0.0
 
     @classmethod
     def from_dense(cls, x: np.ndarray) -> "SparseCOO":
+        """Extract the non-zero pattern of a dense array."""
         idx = np.argwhere(x != 0)
         return cls(indices=idx.astype(np.int64),
                    values=x[tuple(idx.T)] if len(idx) else x.ravel()[:0],
                    shape=tuple(x.shape))
 
     def to_dense(self) -> np.ndarray:
+        """Materialize the dense array (zeros where no entry)."""
         out = np.zeros(self.shape, dtype=self.values.dtype)
         if self.nnz:
             out[tuple(self.indices.T)] = self.values
         return out
 
     def sorted(self) -> "SparseCOO":
+        """Entries re-ordered lexicographically, dim0 major."""
         if self.nnz == 0:
             return self
         order = np.lexsort(self.indices.T[::-1])  # dim0 major
         return SparseCOO(self.indices[order], self.values[order], self.shape)
 
     def slice(self, spec: SliceSpec) -> "SparseCOO":
+        """Entries inside ``spec``, re-based to the slice's origin."""
         mask = np.ones(self.nnz, dtype=bool)
         for d, (lo, hi) in enumerate(spec):
             mask &= (self.indices[:, d] >= lo) & (self.indices[:, d] < hi)
@@ -93,11 +100,14 @@ def normalize_slices(shape: Sequence[int],
 
 
 def slice_shape(spec: SliceSpec) -> Tuple[int, ...]:
+    """Output shape of a normalized slice spec."""
     return tuple(hi - lo for lo, hi in spec)
 
 
 @dataclass
 class RowGroup:
+    """One encoded unit a codec emits: a kind tag + parq-lite columns."""
+
     kind: str                 # "header" | "chunk"
     columns: Dict[str, Any]   # parq-lite column dict
     # numeric columns usable for file pruning on slice reads
@@ -129,10 +139,12 @@ def make_header(shape: Sequence[int], dtype, **extra: Any) -> RowGroup:
 
 
 def is_header(group: Dict[str, Any]) -> bool:
+    """Whether a decoded row group is a tensor header."""
     return "__header__" in group
 
 
 def split_groups(groups: List[Dict[str, Any]]):
+    """(header, chunk_groups); raises ``ValueError`` with no header."""
     headers = [g for g in groups if is_header(g)]
     chunks = [g for g in groups if not is_header(g)]
     if not headers:
@@ -141,10 +153,12 @@ def split_groups(groups: List[Dict[str, Any]]):
 
 
 def header_shape(header: Dict[str, Any]) -> Tuple[int, ...]:
+    """Dense shape recorded in a header group."""
     return tuple(int(x) for x in header["dense_shape"][0])
 
 
 def header_dtype(header: Dict[str, Any]) -> np.dtype:
+    """Element dtype recorded in a header group."""
     return np.dtype(first_scalar(header["dtype"]))
 
 
@@ -166,9 +180,11 @@ class Codec:
     supports_coo: bool = False
 
     def encode(self, tensor: Any, **params) -> List[RowGroup]:
+        """Tensor -> row groups (header first, then chunk groups)."""
         raise NotImplementedError
 
     def decode(self, groups: List[Dict[str, Any]]) -> np.ndarray:
+        """Decoded row groups -> the dense tensor."""
         raise NotImplementedError
 
     def slice_filters(self, header: Dict[str, Any], spec: SliceSpec) -> Dict[str, Tuple[int, int]]:
@@ -176,18 +192,22 @@ class Codec:
         return {}
 
     def decode_slice(self, groups: List[Dict[str, Any]], spec: SliceSpec) -> np.ndarray:
+        """Decode only the ``spec`` window from (pruned) row groups."""
         raise NotImplementedError
 
 
 def as_dense(tensor: Any) -> np.ndarray:
+    """Coerce ndarray-or-SparseCOO to a dense ndarray."""
     return tensor.to_dense() if isinstance(tensor, SparseCOO) else np.asarray(tensor)
 
 
 def as_coo(tensor: Any) -> SparseCOO:
+    """Coerce ndarray-or-SparseCOO to :class:`SparseCOO`."""
     return tensor if isinstance(tensor, SparseCOO) else SparseCOO.from_dense(np.asarray(tensor))
 
 
 def first_scalar(col: Any) -> Any:
+    """First row of a column as a python scalar."""
     v = col[0]
     return v.item() if hasattr(v, "item") else v
 
@@ -196,11 +216,13 @@ _CODECS: Dict[str, Codec] = {}
 
 
 def register(codec: Codec) -> Codec:
+    """Register a layout codec under its ``layout`` name; returns it."""
     _CODECS[codec.layout] = codec
     return codec
 
 
 def get_codec(layout: str) -> Codec:
+    """The codec for ``layout``; raises ``KeyError`` listing known ones."""
     if layout not in _CODECS:
         raise KeyError(f"unknown layout {layout!r}; have {sorted(_CODECS)}")
     return _CODECS[layout]

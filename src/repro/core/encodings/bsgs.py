@@ -41,11 +41,14 @@ def _norm_block_shape(shape: Tuple[int, ...], block_shape) -> Tuple[int, ...]:
 
 
 class BSGSCodec(Codec):
+    """Block-Sparse Grid Storage (paper §IV.E)."""
+
     layout = "bsgs"
     supports_slice = True
     supports_coo = False      # decode_coo here is a dense round-trip, not native
 
     def encode(self, tensor: Any, *, block_shape=None, **_) -> List[RowGroup]:
+        """Tensor -> row groups (header + chunk rows)."""
         t = as_coo(tensor)
         shape = t.shape
         bs = _norm_block_shape(shape, block_shape)
@@ -163,13 +166,16 @@ class BSGSCodec(Codec):
         return buf[crop]
 
     def decode(self, groups: List[Dict[str, Any]]) -> np.ndarray:
+        """Decoded row groups -> the dense tensor."""
         shape, _, _, _ = self._meta(groups)
         return self._scatter(groups, tuple((0, s) for s in shape))
 
     def decode_coo(self, groups: List[Dict[str, Any]]) -> SparseCOO:
+        """Decoded row groups -> :class:`SparseCOO` (no densify)."""
         return SparseCOO.from_dense(self.decode(groups))
 
     def slice_filters(self, header: Dict[str, Any], spec: SliceSpec):
+        """Pushdown predicate selecting chunk rows for ``spec``."""
         shape = header_shape(header)
         bs = tuple(int(x) for x in header["block_shape"][0])
         out = {}
@@ -179,6 +185,7 @@ class BSGSCodec(Codec):
         return out
 
     def decode_slice(self, groups: List[Dict[str, Any]], spec: SliceSpec) -> np.ndarray:
+        """Decode only the ``spec`` window from pruned groups."""
         shape, _, _, _ = self._meta(groups)
         spec = normalize_slices(shape, spec)
         out = self._scatter(groups, spec)

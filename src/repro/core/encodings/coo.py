@@ -22,11 +22,14 @@ from .base import (Codec, RowGroup, SliceSpec, SparseCOO, as_coo,
 
 
 class COOCodec(Codec):
+    """Per-element COO rows (paper's sparse baseline)."""
+
     layout = "coo"
     supports_slice = True
     supports_coo = True
 
     def encode(self, tensor: Any, **_) -> List[RowGroup]:
+        """Tensor -> row groups (header + chunk rows)."""
         t = as_coo(tensor).sorted()
         cols: Dict[str, Any] = {
             "nnz_index": np.arange(t.nnz, dtype=np.int64),
@@ -64,12 +67,15 @@ class COOCodec(Codec):
         return SparseCOO(np.concatenate(idx_parts), np.concatenate(val_parts), shape)
 
     def decode(self, groups: List[Dict[str, Any]]) -> np.ndarray:
+        """Decoded row groups -> the dense tensor."""
         return self._coo(groups).to_dense()
 
     def decode_coo(self, groups: List[Dict[str, Any]]) -> SparseCOO:
+        """Decoded row groups -> :class:`SparseCOO` (no densify)."""
         return self._coo(groups)
 
     def slice_filters(self, header: Dict[str, Any], spec: SliceSpec):
+        """Pushdown predicate selecting chunk rows for ``spec``."""
         shape = header_shape(header)
         out = {}
         for d, (lo, hi) in enumerate(spec):
@@ -78,6 +84,7 @@ class COOCodec(Codec):
         return out
 
     def decode_slice(self, groups: List[Dict[str, Any]], spec: SliceSpec) -> np.ndarray:
+        """Decode only the ``spec`` window from pruned groups."""
         t = self._coo(groups)
         return t.slice(normalize_slices(t.shape, spec)).to_dense()
 

@@ -51,11 +51,14 @@ def _build_tree(idx: np.ndarray, nnz: int, ndim: int):
 
 
 class CSFCodec(Codec):
+    """Compressed Sparse Fiber trees (paper §IV.D)."""
+
     layout = "csf"
     supports_slice = True
     supports_coo = True
 
     def encode(self, tensor: Any, **_) -> List[RowGroup]:
+        """Tensor -> row groups (header + chunk rows)."""
         t = _dedupe(as_coo(tensor))
         idx, vals, ndim, nnz = t.indices, t.values, t.ndim, t.nnz
         node_starts = _build_tree(idx, nnz, ndim)
@@ -195,12 +198,15 @@ class CSFCodec(Codec):
                          np.concatenate(all_vals).astype(dtype), shape)
 
     def decode(self, groups: List[Dict[str, Any]]) -> np.ndarray:
+        """Decoded row groups -> the dense tensor."""
         return self._to_coo(groups).to_dense()
 
     def decode_coo(self, groups: List[Dict[str, Any]]) -> SparseCOO:
+        """Decoded row groups -> :class:`SparseCOO` (no densify)."""
         return self._to_coo(groups)
 
     def slice_filters(self, header: Dict[str, Any], spec: SliceSpec):
+        """Pushdown predicate selecting chunk rows for ``spec``."""
         shape = header_shape(header)
         lo, hi = spec[0]
         if (lo, hi) == (0, shape[0]) or len(shape) < 2:
@@ -215,6 +221,7 @@ class CSFCodec(Codec):
         return {"n1_start": (None, n1e - 1), "n1_end": (n1s + 1, None)}
 
     def decode_slice(self, groups: List[Dict[str, Any]], spec: SliceSpec) -> np.ndarray:
+        """Decode only the ``spec`` window from pruned groups."""
         t = self._to_coo(groups)
         return t.slice(normalize_slices(t.shape, spec)).to_dense()
 

@@ -40,12 +40,15 @@ def _flatten_coo(t: SparseCOO, split: int, transpose: bool) -> Tuple[np.ndarray,
 
 
 class CSRCodec(Codec):
+    """Compressed sparse rows for matrices (paper §IV.C)."""
+
     layout = "csr"
     transpose = False
     supports_slice = True
     supports_coo = True
 
     def encode(self, tensor: Any, *, split: int = 1, **_) -> List[RowGroup]:
+        """Tensor -> row groups (header + chunk rows)."""
         t = as_coo(tensor)
         r, c, v, (n_rows, n_cols) = _flatten_coo(t, split, self.transpose)
         order = np.lexsort((c, r))
@@ -140,12 +143,15 @@ class CSRCodec(Codec):
         return SparseCOO(idx, v, shape)
 
     def decode(self, groups: List[Dict[str, Any]]) -> np.ndarray:
+        """Decoded row groups -> the dense tensor."""
         return self._to_coo(groups).to_dense()
 
     def decode_coo(self, groups: List[Dict[str, Any]]) -> SparseCOO:
+        """Decoded row groups -> :class:`SparseCOO` (no densify)."""
         return self._to_coo(groups)
 
     def slice_filters(self, header: Dict[str, Any], spec: SliceSpec):
+        """Pushdown predicate selecting chunk rows for ``spec``."""
         if self.transpose:
             return {}  # CSC indexes by columns; leading-dim pushdown unavailable
         shape = header_shape(header)
@@ -161,11 +167,14 @@ class CSRCodec(Codec):
         return {"row_start": (None, hi), "row_end": (lo + 1, None)}
 
     def decode_slice(self, groups: List[Dict[str, Any]], spec: SliceSpec) -> np.ndarray:
+        """Decode only the ``spec`` window from pruned groups."""
         t = self._to_coo(groups)
         return t.slice(normalize_slices(t.shape, spec)).to_dense()
 
 
 class CSCCodec(CSRCodec):
+    """CSR's column-major sibling (encodes the transpose walk)."""
+
     layout = "csc"
     transpose = True
 

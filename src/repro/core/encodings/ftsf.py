@@ -22,11 +22,14 @@ from .base import (Codec, RowGroup, SliceSpec, as_dense, first_scalar,
 
 
 class FTSFCodec(Codec):
+    """Flattened Tensor Storage Format (paper §IV.A)."""
+
     layout = "ftsf"
     supports_slice = True
     supports_coo = False      # dense chunks: COO reads densify first
 
     def encode(self, tensor: Any, *, chunk_dims: int = None, **_) -> List[RowGroup]:
+        """Tensor -> row groups (header + chunk rows)."""
         x = as_dense(tensor)
         n = x.ndim
         if chunk_dims is None:
@@ -61,6 +64,7 @@ class FTSFCodec(Codec):
         return shape, chunk_dims, header_dtype(header), chunks
 
     def decode(self, groups: List[Dict[str, Any]]) -> np.ndarray:
+        """Decoded row groups -> the dense tensor."""
         shape, chunk_dims, dtype, groups = self._meta(groups)
         lead = shape[: len(shape) - chunk_dims]
         n_chunks = int(np.prod(lead)) if lead else 1
@@ -76,6 +80,7 @@ class FTSFCodec(Codec):
         return out.reshape(shape)
 
     def slice_filters(self, header: Dict[str, Any], spec: SliceSpec):
+        """Pushdown predicate selecting chunk rows for ``spec``."""
         shape = header_shape(header)
         chunk_dims = int(first_scalar(header["chunk_dim_count"]))
         lead = shape[: len(shape) - chunk_dims]
@@ -89,6 +94,7 @@ class FTSFCodec(Codec):
         return {"chunk_index": (lo, hi)}
 
     def decode_slice(self, groups: List[Dict[str, Any]], spec: SliceSpec) -> np.ndarray:
+        """Decode only the ``spec`` window from pruned groups."""
         shape, chunk_dims, dtype, groups = self._meta(groups)
         spec = normalize_slices(shape, spec)
         n = len(shape)

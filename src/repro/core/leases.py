@@ -90,12 +90,14 @@ class Lease:
         self._released = False
 
     def release(self) -> None:
+        """Drop this pin (idempotent); maintenance may then reclaim."""
         if not self._released:
             self._released = True
             self._registry._release(self.version_vector)
 
     @property
     def released(self) -> bool:
+        """Whether :meth:`release` already ran."""
         return self._released
 
     def __enter__(self) -> "Lease":
@@ -117,6 +119,7 @@ class LeaseRegistry:
         self._lock = threading.Lock()
 
     def acquire(self, vector: VersionVector) -> Lease:
+        """Take one refcounted pin on ``vector``; pair with ``release``."""
         vv = tuple(int(v) for v in vector)
         with self._lock:
             self._counts[vv] = self._counts.get(vv, 0) + 1

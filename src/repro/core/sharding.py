@@ -47,6 +47,7 @@ VersionVector = Tuple[int, ...]
 
 
 def manifest_key(root: str) -> str:
+    """Object key of the store manifest under ``root``."""
     return f"{root.rstrip('/')}/{MANIFEST_NAME}"
 
 
@@ -70,6 +71,7 @@ class ShardRouter:
                              f"(this client supports {ROUTER_ALGO!r})")
 
     def shard_of(self, tensor_id: str) -> int:
+        """Shard index for ``tensor_id`` (stable across processes)."""
         if self.shards == 1:
             return 0
         digest = hashlib.blake2b(tensor_id.encode("utf-8"),
@@ -87,19 +89,27 @@ def load_manifest(store: ObjectStore, root: str) -> Optional[dict]:
 
 def load_or_init_manifest(store: ObjectStore, root: str,
                           shards: Optional[int],
-                          retention: Optional[dict] = None) -> dict:
+                          retention: Optional[dict] = None,
+                          compression: Optional[str] = None) -> dict:
     """Resolve the store's shard layout, creating the manifest if needed.
 
     ``shards=None`` means "whatever the store already is" (1 when nothing
     exists yet). An explicit ``shards`` that contradicts an existing
     manifest is a hard error — N is immutable for the life of the store.
 
-    ``retention`` (e.g. ``{"keep_versions": 3, "ttl_s": None}``) is
-    recorded at create time on **sharded** manifests so every client —
-    including the ``repro.launch.gc`` maintenance CLI — agrees on the
-    store's default vacuum policy without out-of-band configuration.
-    Unsharded stores write no manifest (byte-compat with pre-sharding
-    tables), so their retention default stays client-side.
+    ``retention`` (e.g. ``{"keep_versions": 3, "ttl_s": None}``) and
+    ``compression`` (a chunk-blob codec spec like ``"zlib+shuffle"``) are
+    recorded at create time so every client — including the
+    ``repro.launch.gc`` maintenance CLI — agrees on the store's default
+    vacuum policy and codec without out-of-band configuration.
+
+    Unsharded stores normally write **no manifest** (byte-compat with
+    pre-sharding tables) and keep their defaults client-side; creating a
+    *fresh* unsharded store with an explicit ``compression`` is the one
+    exception — the default is worth recording, and an extra
+    ``_store_manifest.json`` beside a table changes no table bytes. An
+    existing manifest is never rewritten: ctor arguments that differ from
+    it act as client-side overrides, opening a store stays read-only.
     """
     existing = load_manifest(store, root)
     if existing is not None:
@@ -109,13 +119,26 @@ def load_or_init_manifest(store: ObjectStore, root: str,
                 f"store at {root!r} has {found} shards; cannot open with "
                 f"shards={shards} (shard count is fixed at create time)")
         return existing
+    root = root.rstrip("/")
     if shards is None or int(shards) == 1:
-        # unsharded layout: table at <root>, no manifest — byte-compatible
-        # with every table written before sharding existed
-        return {"shards": 1, "router": ROUTER_ALGO, "format": MANIFEST_FORMAT}
+        manifest = {"shards": 1, "router": ROUTER_ALGO,
+                    "format": MANIFEST_FORMAT}
+        if compression is None or compression == "none":
+            # unsharded layout: table at <root>, no manifest written —
+            # byte-compatible with pre-sharding tables
+            return manifest
+        if next(iter(store.list(f"{root}/_delta_log/")), None) is not None:
+            # opening an existing table must not mutate it: the ctor's
+            # compression acts as a client-side default only
+            return manifest
+        manifest["compression"] = compression
+        if retention is not None:
+            manifest["retention"] = dict(retention)
+        return _put_manifest(store, root, manifest,
+                             shards=1, retention=retention,
+                             compression=compression)
     # creating a sharded store where an unsharded table already lives would
     # shadow its data forever (reads would resolve to empty shard tables)
-    root = root.rstrip("/")
     if next(iter(store.list(f"{root}/_delta_log/")), None) is not None:
         raise ValueError(
             f"an unsharded table already exists at {root!r}; cannot create "
@@ -125,13 +148,25 @@ def load_or_init_manifest(store: ObjectStore, root: str,
                 "format": MANIFEST_FORMAT}
     if retention is not None:
         manifest["retention"] = dict(retention)
+    if compression is not None and compression != "none":
+        manifest["compression"] = compression
+    return _put_manifest(store, root, manifest, shards=shards,
+                         retention=retention, compression=compression)
+
+
+def _put_manifest(store: ObjectStore, root: str, manifest: dict, *,
+                  shards: Optional[int], retention: Optional[dict],
+                  compression: Optional[str]) -> dict:
+    """Create-once manifest write; a lost race defers to the winner."""
     body = json.dumps(manifest, sort_keys=True,
                       separators=(",", ":")).encode("utf-8")
     try:
         store.put(manifest_key(root), body, if_absent=True)
     except PutIfAbsentError:
         # lost the create race: the winner's manifest is authoritative
-        return load_or_init_manifest(store, root, shards)
+        return load_or_init_manifest(store, root, shards,
+                                     retention=retention,
+                                     compression=compression)
     return manifest
 
 

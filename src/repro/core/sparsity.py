@@ -20,6 +20,7 @@ VERY_SPARSE_THRESHOLD = 1e-4
 
 
 def density(tensor: Any) -> float:
+    """Non-zero fraction in [0, 1] (0.0 for empty tensors)."""
     if isinstance(tensor, SparseCOO):
         return tensor.density
     x = np.asarray(tensor)

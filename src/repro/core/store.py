@@ -43,6 +43,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..lake import DeltaTable, ObjectStore, ReadExecutor, columnar
+from ..lake.compression import (CompressionSpec, UnknownCodecError,
+                                parse_compression)
 from ..lake.io import get_default_executor
 from ..lake.log import ObjectNotFoundError, catalog_index_key
 from ..lake.table import CompactResult, VacuumResult
@@ -95,19 +97,45 @@ VersionArg = Union[None, int, Sequence[int]]
 
 
 class DeltaTensorStore:
+    """The paper's tensor store: codec-encoded tensors in delta tables.
+
+    See the module docstring for the architecture; ``compression`` sets
+    the store's default chunk-blob codec spec (e.g. ``"zlib+shuffle"``,
+    see :mod:`repro.lake.compression`) — recorded in the store manifest at
+    create time so every later client agrees, overridable per ``put``.
+    ``None`` defers to the manifest (raw bytes when it records nothing).
+    """
+
     def __init__(self, object_store: ObjectStore, root: str = "tensor_store",
                  io: Optional[ReadExecutor] = None,
                  shards: Optional[int] = None,
                  retention: Optional[RetentionPolicy] = None,
-                 spill_threshold: Optional[int] = DEFAULT_SPILL_THRESHOLD):
+                 spill_threshold: Optional[int] = DEFAULT_SPILL_THRESHOLD,
+                 compression: Union[None, str, CompressionSpec] = None):
         root = root.rstrip("/")
         self.root = root
+        spec = parse_compression(compression)
         manifest = load_or_init_manifest(
             object_store, root, shards,
             retention=None if retention is None else
             {"keep_versions": retention.keep_versions,
-             "ttl_s": retention.ttl_s})
+             "ttl_s": retention.ttl_s},
+            compression=None if spec is None else spec.id)
         self.shards: int = int(manifest["shards"])
+        # default chunk-blob codec: explicit ctor arg > manifest > raw.
+        # Reads never consult this — frames are self-describing — so a
+        # store opened with any default reads any mix of codecs. A
+        # manifest naming an optional codec this process lacks (zstd on
+        # a stdlib-only client) therefore must not block opening: this
+        # client degrades to raw writes; only an EXPLICIT ctor arg (or
+        # actually decoding such a frame) raises for a missing codec.
+        if spec is None and manifest.get("compression"):
+            try:
+                spec = parse_compression(manifest["compression"])
+            except UnknownCodecError:
+                spec = None
+        self.compression: Optional[CompressionSpec] = \
+            spec if spec is not None and spec.active else None
         # default vacuum policy: explicit ctor arg > what the store manifest
         # records (sharded stores) > keep-latest-only
         if retention is None and manifest.get("retention"):
@@ -312,17 +340,27 @@ class DeltaTensorStore:
         for p in paths:
             self._headers_by_path.pop(p, None)
 
-    def compact(self) -> List[CompactResult]:
+    def compact(self, *, recompress: Union[None, str, CompressionSpec] = None,
+                ) -> List[CompactResult]:
         """OPTIMIZE every shard table (fanned out on the executor).
+
+        Rewritten files keep their codec; ``recompress="zlib+shuffle"``
+        re-encodes every non-header data file under that codec instead —
+        the in-place migration path for stores written before compression
+        existed (exposed as ``repro.launch.gc --recompress``). Live leased
+        snapshots keep reading their original bytes: compact adds files,
+        vacuum is what eventually deletes the old generation.
 
         Compacted-away paths are evicted from the header and block caches —
         their bytes survive until vacuum, but a stale cache entry must not
         mask a storage-level problem. No-op shards commit nothing.
         """
+        spec = parse_compression(recompress)
         if self.shards == 1:
-            results = [self.tables[0].compact()]
+            results = [self.tables[0].compact(recompress=spec)]
         else:
-            results = self.io.map(lambda t: t.compact(), self.tables)
+            results = self.io.map(lambda t: t.compact(recompress=spec),
+                                  self.tables)
         for shard, res in enumerate(results):
             if not res:
                 continue
@@ -410,10 +448,21 @@ class DeltaTensorStore:
         """Shard index the router assigns ``tensor_id`` (0 when unsharded)."""
         return self.router.shard_of(tensor_id)
 
+    def _tensor_itemsize(self, tensor: Any) -> int:
+        """Dtype width of ``tensor`` — what the byte-shuffle filter
+        transposes on. SparseCOO carriers report their values' dtype."""
+        dt = getattr(tensor, "dtype", None)
+        if dt is None:
+            dt = getattr(getattr(tensor, "values", None), "dtype", None)
+        if dt is None:
+            dt = np.asarray(tensor).dtype
+        return np.dtype(dt).itemsize
+
     def _encode_and_upload(self, tensor: Any, *, layout: str,
                            tensor_id: str,
                            target_file_bytes: Optional[int] = None,
                            guard=None,
+                           compression: Union[None, str, CompressionSpec] = None,
                            **codec_params):
         """Encode + upload part files (no commit). ``layout``/``tensor_id``
         must already be resolved (see :meth:`_resolve_tid`). Returns
@@ -421,12 +470,20 @@ class DeltaTensorStore:
         assigned shard the files were uploaded into and header_seed is
         ``(path, columns)`` for post-commit caching, or None. ``guard`` (an
         :class:`~repro.lake.table.UploadGuard`) registers each upload so
-        concurrent vacuum spares the not-yet-committed files."""
+        concurrent vacuum spares the not-yet-committed files.
+
+        ``compression`` overrides the store default for this tensor's
+        chunk files; headers always land raw (tiny, latency-critical, and
+        a codec-less client must still be able to stat shapes)."""
         codec = get_codec(layout)
         tid = tensor_id
         shard = self.router.shard_of(tid)
         table = self.tables[shard]
         target = TARGET_FILE_BYTES if target_file_bytes is None else target_file_bytes
+        spec = parse_compression(compression)
+        if spec is None:
+            spec = self.compression
+        itemsize = self._tensor_itemsize(tensor) if spec is not None else 1
         groups = codec.encode(tensor, **{k: v for k, v in codec_params.items()
                                          if v is not None})
         adds: List[Dict[str, Any]] = []
@@ -435,10 +492,12 @@ class DeltaTensorStore:
             rows = len(next(iter(grp.columns.values())))
             per_file = max(1, int(target //
                                   max(_approx_row_bytes(grp.columns, rows), 1)))
+            grp_spec = spec if grp.kind != "header" else None
             for lo in range(0, rows, per_file):
                 cols = _slice_columns(grp.columns, lo, min(rows, lo + per_file))
                 adds.append(table.append(
                     cols, commit=False, guard=guard,
+                    compression=grp_spec, shuffle_itemsize=itemsize,
                     partition_values={"tensor": tid, "kind": grp.kind,
                                       "layout": layout}))
             if grp.kind == "header":
@@ -448,6 +507,7 @@ class DeltaTensorStore:
     def put_deferred(self, tensor: Any, *, layout: str = "auto",
                      tensor_id: Optional[str] = None,
                      target_file_bytes: int = TARGET_FILE_BYTES,
+                     compression: Union[None, str, CompressionSpec] = None,
                      **codec_params) -> List[Dict[str, Any]]:
         """Upload part files WITHOUT committing; returns add-actions.
 
@@ -461,7 +521,8 @@ class DeltaTensorStore:
         layout, tid = self._resolve_tid(tensor, layout, tensor_id)
         _shard, adds, _ = self._encode_and_upload(
             tensor, layout=layout, tensor_id=tid,
-            target_file_bytes=target_file_bytes, **codec_params)
+            target_file_bytes=target_file_bytes, compression=compression,
+            **codec_params)
         return adds
 
     def batch(self, *, op: str = "WRITE BATCH",
@@ -478,44 +539,112 @@ class DeltaTensorStore:
 
     def put(self, tensor: Any, *, layout: str = "auto", tensor_id: Optional[str] = None,
             overwrite: bool = False, target_file_bytes: int = TARGET_FILE_BYTES,
+            compression: Union[None, str, CompressionSpec] = None,
             **codec_params) -> str:
+        """Store one tensor in its own atomic commit; returns its id.
+
+        ``layout`` picks the encoding codec (``"auto"`` = the 10% sparsity
+        policy); ``compression`` overrides the store's default chunk-blob
+        codec for this tensor (e.g. ``"zlib+shuffle"``). Raises
+        ``ValueError`` if ``tensor_id`` exists and ``overwrite`` is False.
+        Sugar for a one-put :meth:`batch`.
+        """
         with self.batch(op="PUT TENSOR") as b:
             tid = b.put(tensor, layout=layout, tensor_id=tensor_id,
                         overwrite=overwrite, target_file_bytes=target_file_bytes,
-                        **codec_params)
+                        compression=compression, **codec_params)
         return tid
 
     def delete(self, tid: str) -> None:
+        """Remove ``tid``'s files from the latest snapshot (one commit).
+
+        Older snapshots still see the tensor until :meth:`vacuum`; missing
+        ids are a no-op (sugar for a one-delete :meth:`batch`).
+        """
         with self.batch(op="DELETE TENSOR") as b:
             b.delete(tid, missing_ok=True)
 
     # -- read (legacy eager wrappers over the handle API) --------------------
 
     def get(self, tid: str, *, version: VersionArg = None) -> np.ndarray:
+        """Eager full read of ``tid`` at ``version`` (latest if None)."""
         with self.open(tid, version=version) as ref:
             return ref.read()
 
     def get_coo(self, tid: str, *, version: VersionArg = None) -> SparseCOO:
+        """Eager sparse read (native when the layout supports COO)."""
         with self.open(tid, version=version) as ref:
             return ref.read_coo()
 
     def get_slice(self, tid: str, slices: Sequence[Optional[Tuple[int, int]]], *,
                   version: VersionArg = None) -> np.ndarray:
+        """Eager read-slice (the paper's Eq. (2) leading-dims window)."""
         with self.open(tid, version=version) as ref:
             return ref.read_slice(slices)
 
     # -- catalog conveniences -------------------------------------------------
 
     def list_tensors(self, version: VersionArg = None) -> List[Tuple[str, str]]:
+        """Sorted ``(tensor_id, layout)`` pairs at ``version``."""
         return self.catalog(version).tensors()
 
     def shape_of(self, tid: str, *, version: VersionArg = None) -> Tuple[int, ...]:
+        """Dense shape from the header only (one tiny fetch, cached)."""
         with self.open(tid, version=version) as ref:
             return ref.shape
 
     def tensor_bytes(self, tid: str, *, version: VersionArg = None) -> int:
+        """Stored bytes across the tensor's files (no data fetches)."""
         with self.open(tid, version=version) as ref:
             return ref.nbytes
+
+    def storage_stats(self, version: VersionArg = None) -> Dict[str, Any]:
+        """Logical vs physical bytes of the store at ``version`` — the
+        paper's space-efficiency claim, measurable.
+
+        Walks the (cached) catalog's add-actions, so it costs no data
+        fetches. Returns::
+
+            {"tensors": int, "files": int,
+             "physical_bytes": int,   # stored (possibly compressed)
+             "logical_bytes": int,    # pre-compression file bytes
+             "ratio": float,          # logical / physical  (>= 1.0 good)
+             "compression": str,      # the store's default codec spec
+             "by_codec": {codec_id: {"files", "physical_bytes",
+                                     "logical_bytes", "ratio"}}}
+
+        Files written before compression existed count under codec
+        ``"none"`` with ratio 1.0 — so a half-migrated store shows exactly
+        how much of it still holds raw bytes (what ``gc --recompress``
+        would win).
+        """
+        cat = self.catalog(version)
+        by_codec: Dict[str, Dict[str, Any]] = {}
+        files = physical = logical = 0
+        for tid in cat:
+            entry = cat.entry(tid)
+            for add in entry.header_adds + entry.chunk_adds:
+                codec = add.get("codec", "none")
+                phys = int(add.get("size", 0))
+                logi = int(add.get("rawSize", phys))
+                rec = by_codec.setdefault(
+                    codec, {"files": 0, "physical_bytes": 0,
+                            "logical_bytes": 0})
+                rec["files"] += 1
+                rec["physical_bytes"] += phys
+                rec["logical_bytes"] += logi
+                files += 1
+                physical += phys
+                logical += logi
+        for rec in by_codec.values():
+            rec["ratio"] = (rec["logical_bytes"] / rec["physical_bytes"]
+                            if rec["physical_bytes"] else 1.0)
+        return {"tensors": len(cat), "files": files,
+                "physical_bytes": physical, "logical_bytes": logical,
+                "ratio": logical / physical if physical else 1.0,
+                "compression": self.compression.id if self.compression
+                else "none",
+                "by_codec": by_codec}
 
     def version(self) -> Union[int, Tuple[int, ...]]:
         """Latest version: an int (1-shard) or the per-shard version vector."""

@@ -2,6 +2,10 @@ from .object_store import (InMemoryObjectStore, LatencyModel, LocalFSObjectStore
                            ObjectNotFoundError, ObjectStore, PutIfAbsentError)
 from .log import (CommitConflict, DeltaLog, Snapshot, catalog_index_key,
                   catalog_index_version)
+from .compression import (CompressionSpec, UnknownCodecError, available_codecs,
+                          byte_shuffle, byte_unshuffle, decode_frame,
+                          encode_frame, frame_info, parse_compression,
+                          register_compressor)
 from .io import (BlockCache, ReadExecutor, ReadStats, get_default_executor,
                  set_default_executor)
 from .table import (CompactResult, DeltaTable, UploadGuard, VacuumResult,
@@ -15,4 +19,7 @@ __all__ = [
     "BlockCache", "ReadExecutor", "ReadStats", "get_default_executor",
     "set_default_executor", "CompactResult", "VacuumResult", "UploadGuard",
     "catalog_index_key", "catalog_index_version",
+    "CompressionSpec", "UnknownCodecError", "available_codecs",
+    "byte_shuffle", "byte_unshuffle", "decode_frame", "encode_frame",
+    "frame_info", "parse_compression", "register_compressor",
 ]

@@ -154,7 +154,8 @@ def _stats_of(values: np.ndarray) -> Optional[Dict[str, Any]]:
     return {"min": values.min().item(), "max": values.max().item()}
 
 
-def _encode_column(name: str, col: Any, num_rows: int) -> Tuple[bytes, Dict[str, Any]]:
+def _encode_column(name: str, col: Any, num_rows: int, *,
+                   compress_blocks: bool = True) -> Tuple[bytes, Dict[str, Any]]:
     # --- classify ---
     if isinstance(col, np.ndarray) and col.ndim == 1 and col.dtype.kind != "O":
         kind = "array"
@@ -209,7 +210,7 @@ def _encode_column(name: str, col: Any, num_rows: int) -> Tuple[bytes, Dict[str,
         meta["flat_meta"] = flat_meta
         meta["stats"] = _stats_of(flat)
 
-    comp, was = _maybe_compress(raw)
+    comp, was = _maybe_compress(raw) if compress_blocks else (raw, False)
     meta["compressed"] = was
     return comp, meta
 
@@ -246,11 +247,17 @@ def _decode_column(raw: bytes, meta: Dict[str, Any]) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def write_table(columns: Dict[str, Any]) -> Tuple[bytes, Dict[str, Any]]:
+def write_table(columns: Dict[str, Any], *,
+                compress_blocks: bool = True) -> Tuple[bytes, Dict[str, Any]]:
     """Encode a column dict into a parq-lite file.
 
     Returns (file_bytes, stats) where stats = {column: {min,max}} for numeric
     columns — callers persist these in the delta-log add-action for skipping.
+
+    ``compress_blocks=False`` skips the built-in opportunistic per-block
+    zlib: callers that frame the whole file under a file-level codec (see
+    :mod:`repro.lake.compression`) must hand it raw blocks, or the outer
+    codec would grind against already-compressed high-entropy bytes.
     """
     if not columns:
         raise ValueError("empty table")
@@ -259,7 +266,8 @@ def write_table(columns: Dict[str, Any]) -> Tuple[bytes, Dict[str, Any]]:
     metas: List[Dict[str, Any]] = []
     offset = 0
     for name, col in columns.items():
-        raw, meta = _encode_column(name, col, num_rows)
+        raw, meta = _encode_column(name, col, num_rows,
+                                   compress_blocks=compress_blocks)
         meta["offset"] = offset
         meta["length"] = len(raw)
         offset += len(raw)
@@ -296,4 +304,5 @@ def read_table(data: bytes, columns: Optional[Sequence[str]] = None) -> Dict[str
 
 
 def num_rows(data: bytes) -> int:
+    """Row count of a parq-lite file, read from the header only."""
     return _header(data)[0]["num_rows"]

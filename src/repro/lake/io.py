@@ -11,6 +11,12 @@ weight loading) funnels its object-store fetches through one
 * an **LRU block cache** keyed by ``(store, object key)`` holding immutable
   data-file bytes — delta data files are write-once, so cached blocks can
   never go stale; log/metadata reads bypass the cache;
+* **transparent decompression**: part files framed by a chunk-blob codec
+  (:mod:`repro.lake.compression`) are unframed as they arrive off the
+  wire, so the cache stores *decoded* blocks — a warm read pays neither
+  the bandwidth nor the decode cost — while the object store (and any
+  modeled :class:`~repro.lake.object_store.LatencyModel`) charges the
+  compressed size; unframed bytes pass through untouched;
 * **request hedging** (straggler mitigation): if a get hasn't finished
   after ``hedge_after_s`` a duplicate is raced against it and the first
   result wins — object-store reads are idempotent so duplicates are safe;
@@ -29,6 +35,8 @@ from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
+
+from .compression import decode_frame, is_framed
 
 DEFAULT_MAX_WORKERS = 8
 DEFAULT_CACHE_BYTES = 64 << 20
@@ -73,17 +81,26 @@ class ReadStats:
     cache_misses: int = 0
     hedges_launched: int = 0
     hedges_won: int = 0
+    # chunk-blob decompression: frames unwrapped off the wire, and the
+    # compressed (wire) vs decoded sizes they moved — the space claim
+    frames_decoded: int = 0
+    frame_bytes_wire: int = 0
+    frame_bytes_decoded: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def bump(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to the named counters."""
         with self._lock:
             for k, d in deltas.items():
                 setattr(self, k, getattr(self, k) + d)
 
     def reset(self) -> None:
+        """Zero every counter (benchmark epochs)."""
         with self._lock:
             self.gets = self.cache_hits = self.cache_misses = 0
             self.hedges_launched = self.hedges_won = 0
+            self.frames_decoded = 0
+            self.frame_bytes_wire = self.frame_bytes_decoded = 0
 
 
 class BlockCache:
@@ -96,6 +113,7 @@ class BlockCache:
         self._lock = threading.Lock()
 
     def get(self, key: Tuple[int, str]) -> Optional[bytes]:
+        """The cached block (refreshing its LRU position) or None."""
         with self._lock:
             data = self._blocks.get(key)
             if data is not None:
@@ -103,6 +121,7 @@ class BlockCache:
             return data
 
     def put(self, key: Tuple[int, str], data: bytes) -> None:
+        """Insert a block, evicting LRU entries past the byte budget."""
         if len(data) > self.capacity:
             return  # never evict the whole cache for one oversized block
         with self._lock:
@@ -116,18 +135,21 @@ class BlockCache:
                 self._bytes -= len(evicted)
 
     def invalidate(self, key: Tuple[int, str]) -> None:
+        """Drop one block (deleted objects must not serve from cache)."""
         with self._lock:
             old = self._blocks.pop(key, None)
             if old is not None:
                 self._bytes -= len(old)
 
     def clear(self) -> None:
+        """Drop every cached block."""
         with self._lock:
             self._blocks.clear()
             self._bytes = 0
 
     @property
     def nbytes(self) -> int:
+        """Total bytes currently cached."""
         with self._lock:
             return self._bytes
 
@@ -172,6 +194,14 @@ class ReadExecutor:
     def _fetch_miss(self, store: Any, key: str,
                     cache_key: Optional[Tuple[int, str]]) -> bytes:
         data = self._get_raw(store, key)
+        # unframe compressed part files here, off the wire: the cache (and
+        # every consumer above) sees decoded bytes, while the store charged
+        # bandwidth for the compressed size it actually moved
+        if is_framed(data):
+            wire = len(data)
+            data = decode_frame(data)
+            self.stats.bump(frames_decoded=1, frame_bytes_wire=wire,
+                            frame_bytes_decoded=len(data))
         if cache_key is not None:
             self.cache.put(cache_key, data)
         return data
@@ -226,6 +256,7 @@ class ReadExecutor:
 
     def fetch_all(self, store: Any, keys: Sequence[str], *,
                   cacheable: bool = True) -> List[bytes]:
+        """Materialized :meth:`fetch_ordered` (all blobs, input order)."""
         return list(self.fetch_ordered(store, keys, cacheable=cacheable))
 
     def invalidate(self, store: Any, keys: Sequence[str]) -> None:

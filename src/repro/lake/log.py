@@ -37,6 +37,7 @@ def _log_key(table: str, version: int) -> str:
 
 
 def catalog_index_key(table: str, version: int) -> str:
+    """Object key of the spilled catalog index for ``version``."""
     return f"{table}/{CATALOG_INDEX_DIR}/{version:020d}.index.json"
 
 
@@ -68,6 +69,8 @@ class Snapshot:
     files: Dict[str, Dict[str, Any]]  # path -> add action payload
 
     def add_actions(self) -> List[Dict[str, Any]]:
+        """Live add-actions (with ``path`` folded back in), path-sorted —
+        the deterministic order every scan/catalog walk relies on."""
         return [dict(a, path=p) for p, a in sorted(self.files.items())]
 
 
@@ -87,6 +90,8 @@ class CommitConflict(Exception):
 
 
 class DeltaLog:
+    """One table's ordered commit history (the ``_delta_log/`` tree)."""
+
     def __init__(self, store: ObjectStore, table_path: str):
         self.store = store
         self.table = table_path.rstrip("/")
@@ -241,6 +246,11 @@ class DeltaLog:
         return None
 
     def snapshot(self, version: Optional[int] = None) -> Snapshot:
+        """Materialize table state at ``version`` (latest if None).
+
+        Replays checkpoint + trailing commits once, then serves from the
+        immutable snapshot cache. Raises :class:`ObjectNotFoundError` for
+        a missing table and ``ValueError`` for future versions."""
         if version is not None:
             # pinned reads on a cached snapshot are fully local: log files
             # are immutable, so no freshness probe is needed
@@ -289,6 +299,7 @@ class DeltaLog:
         return snap
 
     def history(self) -> Iterator[Dict[str, Any]]:
+        """Yield each version's ``commitInfo`` (op, timestamp, version)."""
         for v in range(self.latest_version() + 1):
             try:
                 body = self.store.get(_log_key(self.table, v)).decode("utf-8")

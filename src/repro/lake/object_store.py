@@ -27,25 +27,32 @@ class PutIfAbsentError(Exception):
 
 
 class ObjectNotFoundError(KeyError):
-    pass
+    """Raised by ``get``/``head`` for a key that does not exist."""
 
 
 class ObjectStore:
     """Interface: immutable blobs addressed by '/'-separated string keys."""
 
     def put(self, key: str, data: bytes, *, if_absent: bool = False) -> None:
+        """Store ``data`` at ``key``; with ``if_absent`` raise
+        :class:`PutIfAbsentError` instead of overwriting (the atomic
+        commit primitive)."""
         raise NotImplementedError
 
     def get(self, key: str) -> bytes:
+        """The blob at ``key``; raises :class:`ObjectNotFoundError`."""
         raise NotImplementedError
 
     def list(self, prefix: str = "") -> Iterator[str]:
+        """All keys starting with ``prefix``, in sorted order."""
         raise NotImplementedError
 
     def delete(self, key: str) -> None:
+        """Remove ``key``; deleting a missing key is a no-op."""
         raise NotImplementedError
 
     def exists(self, key: str) -> bool:
+        """Whether ``key`` exists (a HEAD probe; costs one RTT)."""
         try:
             self.head(key)
             return True
@@ -58,6 +65,8 @@ class ObjectStore:
 
 
 class LocalFSObjectStore(ObjectStore):
+    """Keys are files under a root directory (delta-on-HDFS style)."""
+
     def __init__(self, root: str):
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
@@ -69,6 +78,8 @@ class LocalFSObjectStore(ObjectStore):
         return p
 
     def put(self, key: str, data: bytes, *, if_absent: bool = False) -> None:
+        """Durably write ``data``; ``if_absent`` uses O_CREAT|O_EXCL
+        (atomic on POSIX — the delta commit primitive)."""
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         if if_absent:
@@ -92,6 +103,7 @@ class LocalFSObjectStore(ObjectStore):
             os.replace(tmp, path)
 
     def get(self, key: str) -> bytes:
+        """Read the file at ``key``; raises :class:`ObjectNotFoundError`."""
         try:
             with open(self._path(key), "rb") as f:
                 return f.read()
@@ -99,6 +111,7 @@ class LocalFSObjectStore(ObjectStore):
             raise ObjectNotFoundError(key) from e
 
     def list(self, prefix: str = "") -> Iterator[str]:
+        """Sorted keys under ``prefix`` (in-flight .tmp files hidden)."""
         base = self.root
         out = []
         for dirpath, _dirnames, filenames in os.walk(base):
@@ -112,12 +125,14 @@ class LocalFSObjectStore(ObjectStore):
         return iter(sorted(out))
 
     def delete(self, key: str) -> None:
+        """Remove the file at ``key``; missing keys are a no-op."""
         try:
             os.remove(self._path(key))
         except FileNotFoundError:
             pass
 
     def head(self, key: str) -> int:
+        """Size in bytes; raises :class:`ObjectNotFoundError`."""
         try:
             return os.stat(self._path(key)).st_size
         except FileNotFoundError as e:
@@ -165,6 +180,11 @@ class LatencyModel:
     _transfer_s: float = field(default=0.0, repr=False)
 
     def charge(self, nbytes: int) -> None:
+        """Account one request moving ``nbytes`` payload bytes.
+
+        Charged at the size the store actually moves — for
+        frame-compressed part files that is the *compressed* size, which
+        is how benchmarks see the bandwidth win honestly."""
         transfer = (nbytes * 8.0) / self.bandwidth_bps
         cost = self.rtt_s + transfer
         tid = threading.get_ident()
@@ -190,6 +210,7 @@ class LatencyModel:
             time.sleep(cost * self.occupancy_scale)
 
     def reset(self) -> None:
+        """Zero the accumulated time/request/byte accounting."""
         with self._lock:
             self.elapsed_s = 0.0
             self.serial_s = 0.0
@@ -201,6 +222,8 @@ class LatencyModel:
 
 
 class InMemoryObjectStore(ObjectStore):
+    """Dict-backed store with an optional modeled-latency account."""
+
     def __init__(self, latency: Optional[LatencyModel] = None,
                  fail_after_puts: Optional[int] = None):
         self._data: Dict[str, bytes] = {}
@@ -212,6 +235,8 @@ class InMemoryObjectStore(ObjectStore):
         self._puts = 0
 
     def put(self, key: str, data: bytes, *, if_absent: bool = False) -> None:
+        """Store ``data`` (charging modeled latency); ``if_absent``
+        raises :class:`PutIfAbsentError` when the key exists."""
         if self.latency:
             self.latency.charge(len(data))
         with self._lock:
@@ -223,6 +248,7 @@ class InMemoryObjectStore(ObjectStore):
             self._puts += 1
 
     def get(self, key: str) -> bytes:
+        """The stored blob (charging modeled latency for its size)."""
         with self._lock:
             if key not in self._data:
                 raise ObjectNotFoundError(key)
@@ -232,6 +258,7 @@ class InMemoryObjectStore(ObjectStore):
         return data
 
     def list(self, prefix: str = "") -> Iterator[str]:
+        """Sorted keys under ``prefix`` (one modeled list request)."""
         if self.latency:
             self.latency.charge(0)
         with self._lock:
@@ -239,10 +266,12 @@ class InMemoryObjectStore(ObjectStore):
         return iter(keys)
 
     def delete(self, key: str) -> None:
+        """Drop ``key``; missing keys are a no-op."""
         with self._lock:
             self._data.pop(key, None)
 
     def head(self, key: str) -> int:
+        """Size in bytes; raises :class:`ObjectNotFoundError`."""
         # a HEAD is a real round-trip on S3/GCS — charge the RTT (0 bytes)
         # so latest_version() probing shows up in modeled I/O accounting
         if self.latency:

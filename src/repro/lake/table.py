@@ -19,11 +19,12 @@ from __future__ import annotations
 import threading
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from . import columnar
+from .compression import (CompressionSpec, encode_frame, parse_compression)
 from .io import ReadExecutor, get_default_executor, store_scope
 from .log import (CommitConflict, DeltaLog, Snapshot, catalog_index_version)
 from .object_store import ObjectNotFoundError, ObjectStore
@@ -58,12 +59,14 @@ class UploadGuard:
         self._closed = False
 
     def add(self, path: str) -> None:
+        """Register one relative ``path`` as in-flight (pre-upload)."""
         with _inflight_lock:
             bucket = _inflight.setdefault(self._key, {})
             bucket[path] = bucket.get(path, 0) + 1
         self._paths.append(path)
 
     def close(self) -> None:
+        """Deregister every path this guard added (idempotent)."""
         if self._closed:
             return
         self._closed = True
@@ -98,6 +101,7 @@ class CompactResult:
 
     files_compacted: int = 0            # input files rewritten away
     files_written: int = 0              # merged files added
+    files_recompressed: int = 0         # inputs rewritten under a new codec
     version: Optional[int] = None       # committed version (None = no commit)
     removed_paths: List[str] = field(default_factory=list)
 
@@ -168,6 +172,53 @@ def _apply_mask(batch: Dict[str, Any], mask: Optional[np.ndarray]) -> Dict[str, 
     return out
 
 
+def _columns_itemsize(columns: Dict[str, Any]) -> int:
+    """Best-effort shuffle itemsize for a decoded column dict.
+
+    Prefers a per-row ``dtype`` string column (FTSF/CSF/BSGS chunk rows
+    record the tensor dtype), then the widest-by-bytes fixed-dtype array
+    column (COO values/indices), else 1 (shuffle becomes the identity).
+    Only ever used when an add-action predates recorded itemsizes.
+    """
+    dt = columns.get("dtype")
+    if dt is not None and len(dt):
+        try:
+            return np.dtype(str(dt[0])).itemsize
+        except TypeError:
+            pass
+    best, best_bytes = 1, -1
+    for v in columns.values():
+        if isinstance(v, np.ndarray) and v.dtype.kind in "iuf" \
+                and v.nbytes > best_bytes:
+            best, best_bytes = v.dtype.itemsize, v.nbytes
+    return best
+
+
+def _output_compression(adds: List[Dict[str, Any]],
+                        merged_columns: Dict[str, Any],
+                        target) -> Tuple[Any, int]:
+    """(spec, shuffle_itemsize) a compact rewrite should encode under.
+
+    With a ``recompress`` target, that target wins. Otherwise the inputs'
+    codec is preserved — the codec of the largest input file, so compact
+    never silently decompresses a table (nor compresses a raw one). The
+    itemsize comes from the inputs' recorded ``itemsize`` when present,
+    else it is derived from the decoded rows (legacy-file migration).
+    """
+    spec = target
+    if spec is None:
+        biggest = max(adds, key=lambda a: int(a.get("size", 0)))
+        codec_id = biggest.get("codecRequested",
+                               biggest.get("codec", "none"))
+        if codec_id == "none":
+            return None, 1  # raw inputs stay raw (legacy byte layout)
+        spec = parse_compression(codec_id)
+    itemsize = max((int(a.get("itemsize", 0)) for a in adds), default=0)
+    if itemsize < 1:
+        itemsize = _columns_itemsize(merged_columns)
+    return spec, itemsize
+
+
 def _merge_batches(batches: List[Dict[str, Any]]) -> Dict[str, Any]:
     if not batches:
         return {}
@@ -185,6 +236,8 @@ def _merge_batches(batches: List[Dict[str, Any]]) -> Dict[str, Any]:
 
 
 class DeltaTable:
+    """Append/scan/maintain one delta-logged table of parq-lite files."""
+
     def __init__(self, store: ObjectStore, path: str,
                  io: Optional[ReadExecutor] = None):
         self.store = store
@@ -198,6 +251,7 @@ class DeltaTable:
     def create(cls, store: ObjectStore, path: str,
                metadata: Optional[Dict[str, Any]] = None,
                io: Optional[ReadExecutor] = None) -> "DeltaTable":
+        """Open the table at ``path``, committing CREATE if it is new."""
         t = cls(store, path, io=io)
         if t.exists():
             return t
@@ -205,9 +259,11 @@ class DeltaTable:
         return t
 
     def exists(self) -> bool:
+        """Whether any version has ever been committed here."""
         return self.log.latest_version() >= 0
 
     def version(self) -> int:
+        """Latest committed version (-1 for a nonexistent table)."""
         return self.log.latest_version()
 
     # -- write ----------------------------------------------------------------
@@ -219,7 +275,9 @@ class DeltaTable:
 
     def append(self, columns: Dict[str, Any], *, partition_values: Optional[Dict[str, str]] = None,
                commit: bool = True,
-               guard: Optional[UploadGuard] = None) -> Dict[str, Any]:
+               guard: Optional[UploadGuard] = None,
+               compression: Union[None, str, CompressionSpec] = None,
+               shuffle_itemsize: int = 1) -> Dict[str, Any]:
         """Write one parq-lite file; optionally defer the commit.
 
         With ``commit=False`` the data file is uploaded but invisible; the
@@ -229,14 +287,45 @@ class DeltaTable:
         makes the checkpoint atomic. Pass a :meth:`guard_uploads` guard so
         a concurrent vacuum cannot mistake the not-yet-committed file for
         an orphan (registered before the first byte is uploaded).
+
+        ``compression`` (a spec like ``"zlib+shuffle"``) frames the file
+        under a chunk-blob codec; ``shuffle_itemsize`` is the stored dtype
+        width the byte-shuffle filter groups on (1 disables shuffling).
+        The add-action then records ``codec`` (what actually happened —
+        incompressible payloads fall back to ``"none"``), ``rawSize`` (the
+        pre-compression length; ``size`` stays the stored length vacuum
+        and the wire account in), and ``itemsize`` so later recompression
+        (:meth:`compact`) can re-shuffle without re-learning the dtype.
+        ``compression=None`` writes the exact pre-compression byte layout.
         """
-        data, stats = columnar.write_table(columns)
-        fname = f"part-{uuid.uuid4().hex}.pql"
-        if guard is not None:
-            guard.add(fname)
-        self.store.put(f"{self.path}/{fname}", data)
-        add = {"path": fname, "size": len(data), "stats": stats,
+        spec = parse_compression(compression)
+        framed = spec is not None and spec.active
+        # under a file-level codec the built-in per-block zlib must stay
+        # off: shuffling/compressing already-compressed blocks only burns
+        # CPU and hides the codec's real ratio
+        data, stats = columnar.write_table(columns, compress_blocks=not framed)
+        add = {"path": f"part-{uuid.uuid4().hex}.pql", "stats": stats,
                "partitionValues": partition_values or {}, "dataChange": True}
+        if framed:
+            raw_len = len(data)
+            data, codec_id = encode_frame(data, spec,
+                                          itemsize=shuffle_itemsize)
+            if codec_id != "none":
+                add["codec"] = codec_id
+                add["rawSize"] = raw_len
+                add["itemsize"] = int(shuffle_itemsize)
+            # else: incompressible fallback — stored raw and UNFRAMED, the
+            # file is byte-identical to an uncompressed write, so no
+            # codec/rawSize is recorded (ratio stays exactly 1.0)
+            if codec_id != spec.id:
+                # what actually happened differs from what was asked (raw
+                # fallback, or shuffle skipped for 1-byte dtypes): record
+                # the request so recompress-to-this-spec stays idempotent
+                add["codecRequested"] = spec.id
+        add["size"] = len(data)
+        if guard is not None:
+            guard.add(add["path"])
+        self.store.put(f"{self.path}/{add['path']}", data)
         if commit:
             self.log.commit([{"add": add}], op="WRITE")
         return add
@@ -327,18 +416,23 @@ class DeltaTable:
             version=version)))
 
     def files(self, version: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Live add-actions at ``version`` (latest if None)."""
         return self.log.snapshot(version).add_actions()
 
     def total_bytes(self, version: Optional[int] = None) -> int:
+        """Sum of live files' *stored* sizes at ``version``."""
         return sum(a["size"] for a in self.files(version))
 
     def snapshot(self, version: Optional[int] = None) -> Snapshot:
+        """The log's materialized state at ``version`` (latest if None)."""
         return self.log.snapshot(version)
 
     # -- maintenance -----------------------------------------------------------
 
     def compact(self, max_rows_per_file: int = 1 << 20, *,
-                max_retries: int = 3) -> CompactResult:
+                max_retries: int = 3,
+                recompress: Union[None, str, CompressionSpec] = None,
+                ) -> CompactResult:
         """Rewrite multi-file partition groups into one file each.
 
         Files are compacted **per partition group** so the rewritten
@@ -347,9 +441,18 @@ class DeltaTable:
         would fuse incompatible row schemas, e.g. tensor headers with chunk
         rows) after OPTIMIZE.
 
-        When no group has more than one file this is a **commit-free
-        no-op** returning a falsy result — maintenance crons must not grow
-        the log (and invalidate pinned version vectors) doing nothing.
+        Rewritten files keep their inputs' chunk-blob codec (the codec of
+        the largest input file): compacting a compressed table must not
+        silently inflate it back to raw bytes. ``recompress=`` (a spec
+        like ``"zlib+shuffle"``) instead re-encodes under that codec and
+        ALSO rewrites single-file groups whose codec differs — the
+        migration path for tables written before compression existed (see
+        ``repro.launch.gc --recompress``). Header partitions are left
+        alone (tiny, latency-critical, deliberately stored raw).
+
+        When nothing needs rewriting this is a **commit-free no-op**
+        returning a falsy result — maintenance crons must not grow the log
+        (and invalidate pinned version vectors) doing nothing.
 
         The commit is **fenced** at the snapshot compact planned against:
         a concurrent writer that lands first (e.g. deleting a tensor whose
@@ -358,6 +461,7 @@ class DeltaTable:
         Compact never deletes bytes; the rewritten-away files stay in the
         object store for older snapshots until :meth:`vacuum`.
         """
+        target = parse_compression(recompress)
         attempt = 0
         with self.guard_uploads() as guard:
             while True:
@@ -368,16 +472,28 @@ class DeltaTable:
                     groups.setdefault(tuple(sorted(pv.items())), []).append(add)
                 new_adds: List[Dict[str, Any]] = []
                 removes: List[str] = []
+                recompressed = 0
                 for pv_items, adds in groups.items():
-                    if len(adds) <= 1:
-                        continue  # already one file for this partition
+                    mismatched = 0
+                    if target is not None and \
+                            dict(pv_items).get("kind") != "header":
+                        mismatched = sum(
+                            1 for a in adds
+                            if a.get("codecRequested",
+                                     a.get("codec", "none")) != target.id)
+                    if len(adds) <= 1 and not mismatched:
+                        continue  # one file, right codec: nothing to do
                     keys = [f"{self.path}/{a['path']}" for a in adds]
                     batches = [columnar.read_table(data)
                                for data in self.io.fetch_ordered(self.store, keys)]
+                    merged = _merge_batches(batches)
+                    spec, itemsize = _output_compression(adds, merged, target)
                     removes.extend(a["path"] for a in adds)
+                    recompressed += mismatched
                     new_adds.append(self.append(
-                        _merge_batches(batches), commit=False,
-                        partition_values=dict(pv_items), guard=guard))
+                        merged, commit=False,
+                        partition_values=dict(pv_items), guard=guard,
+                        compression=spec, shuffle_itemsize=itemsize))
                 if not new_adds:
                     return CompactResult()  # commit-free no-op
                 try:
@@ -389,7 +505,9 @@ class DeltaTable:
                         raise
                     continue  # somebody landed first: re-plan on their snapshot
                 return CompactResult(files_compacted=len(removes),
-                                     files_written=len(new_adds), version=v,
+                                     files_written=len(new_adds),
+                                     files_recompressed=recompressed,
+                                     version=v,
                                      removed_paths=removes)
 
     def vacuum(self, *, horizon: Optional[int] = None,

@@ -8,7 +8,11 @@ decides), optionally OPTIMIZEs every shard, then vacuums with the retention
 horizon ``keep-versions``/``ttl`` computed per shard. Prints per-shard files
 and bytes reclaimed. ``--dry-run`` reports without deleting. ``--spill-index``
 backfills the spilled catalog index at the latest version (useful on tables
-that grew large before spilling existed).
+that grew large before spilling existed). ``--recompress zlib+shuffle``
+rewrites every data file under that chunk-blob codec during compact — the
+migration path for tables written before compression existed (run
+``--vacuum`` afterwards, or in the same invocation, to reclaim the old
+raw generation once retention allows).
 
 Leases protect only readers in *this* process; the horizon policy is what
 protects readers elsewhere — pick ``--keep-versions`` accordingly.
@@ -40,6 +44,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="store root key prefix inside --dir")
     ap.add_argument("--compact", action="store_true",
                     help="OPTIMIZE every shard before vacuuming")
+    ap.add_argument("--recompress", metavar="CODEC", default=None,
+                    help="rewrite data files under this chunk-blob codec "
+                         "spec during compact (e.g. zlib+shuffle; implies "
+                         "--compact)")
     ap.add_argument("--vacuum", action="store_true",
                     help="delete files outside the retention horizon")
     ap.add_argument("--keep-versions", type=int, default=None,
@@ -53,8 +61,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="report what vacuum would delete; change nothing")
     args = ap.parse_args(argv)
 
+    if args.recompress:
+        args.compact = True
     if not (args.compact or args.vacuum or args.spill_index):
-        ap.error("nothing to do: pass --compact, --vacuum and/or --spill-index")
+        ap.error("nothing to do: pass --compact (or --recompress), "
+                 "--vacuum and/or --spill-index")
     if args.dry_run and args.compact:
         print("[gc] --dry-run: skipping compact (it would commit)")
     if args.dry_run and args.spill_index:
@@ -66,12 +77,20 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"version {store.version()}")
 
     if args.compact and not args.dry_run:
-        for shard, res in enumerate(store.compact()):
+        for shard, res in enumerate(store.compact(recompress=args.recompress)):
             if res:
+                extra = (f", {res.files_recompressed} recompressed"
+                         if res.files_recompressed else "")
                 print(f"[gc] shard {shard}: compacted {res.files_compacted} "
-                      f"files -> {res.files_written} (v{res.version})")
+                      f"files -> {res.files_written}{extra} (v{res.version})")
             else:
                 print(f"[gc] shard {shard}: compact no-op (commit-free)")
+        if args.recompress:
+            stats = store.storage_stats()
+            print(f"[gc] storage after recompress: "
+                  f"{_fmt_bytes(stats['physical_bytes'])} physical / "
+                  f"{_fmt_bytes(stats['logical_bytes'])} logical "
+                  f"({stats['ratio']:.2f}x)")
 
     if args.spill_index and not args.dry_run:
         for key in store.spill_catalog():

@@ -1,0 +1,68 @@
+"""Docs drift gate: ARCHITECTURE.md must cover every core/lake module.
+
+CI runs this so the documentation layer cannot silently rot as the code
+grows: adding a public module under ``src/repro/core`` or
+``src/repro/lake`` without mentioning its path in the module index of
+``docs/ARCHITECTURE.md`` fails the build, as does a README link to a
+``docs/*.md`` file that does not exist.
+
+Usage: ``python tools/check_docs.py`` from the repo root (CI does).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+COVERED_PACKAGES = ("src/repro/core", "src/repro/lake")
+
+
+def public_modules() -> list:
+    """Repo-relative paths of every public module in the covered layers."""
+    out = []
+    for pkg in COVERED_PACKAGES:
+        for p in sorted((REPO / pkg).rglob("*.py")):
+            if p.name.startswith("_"):
+                continue  # __init__/private modules document their package
+            out.append(p.relative_to(REPO).as_posix())
+    return out
+
+
+def main() -> int:
+    """Check module-index coverage + README doc links; 0 = clean."""
+    failures = []
+
+    arch = REPO / "docs" / "ARCHITECTURE.md"
+    if not arch.exists():
+        print("FAIL: docs/ARCHITECTURE.md does not exist", file=sys.stderr)
+        return 1
+    text = arch.read_text()
+    missing = [m for m in public_modules() if m not in text]
+    for m in missing:
+        failures.append(f"module {m} is missing from docs/ARCHITECTURE.md's "
+                        f"module index")
+
+    readme = (REPO / "README.md").read_text()
+    linked = set(re.findall(r"\((docs/[\w./-]+\.md)\)", readme))
+    for doc in ("docs/ARCHITECTURE.md", "docs/OPERATIONS.md",
+                "docs/BENCHMARKS.md"):
+        if doc not in linked:
+            failures.append(f"README.md does not link to {doc}")
+    for doc in sorted(linked):
+        if not (REPO / doc).exists():
+            failures.append(f"README.md links to {doc}, which does not exist")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        print(f"\n{len(failures)} docs check(s) failed", file=sys.stderr)
+        return 1
+    print(f"OK: {len(public_modules())} core/lake modules covered by "
+          f"docs/ARCHITECTURE.md; README doc links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
