@@ -1,0 +1,193 @@
+"""Steady-state streaming-loader throughput vs serial eager gets.
+
+The first *sustained* benchmark: instead of one-shot read makespans it
+measures batches/s over a whole epoch on the virtual clock (paper testbed:
+1 Gbps, 10 ms RTT object store). A 4-shard store holds four FTSF token
+tensors; the :class:`~repro.data.stream.StreamLoader` streams shuffled
+batches across all four with a windowed prefetch and ONE merged
+``read_many`` fetch plan per batch. The serial baseline replays the exact
+same batch plan the way the pre-stream loader fetched it: pinned refs and
+one awaited ``read_slice`` per coalesced row-run, in sequence.
+
+Reported:
+
+* sustained loader batches/s vs serial-gets batches/s at widths 1 and 8
+  (the gate: loader >= 2x serial at width 8 — cross-batch pipelining plus
+  merged plans must beat per-run awaited gets);
+* warm-vs-cold epoch ratio with a block cache (epoch 2 streams from
+  decoded cache blocks; the modeled store sees ~zero requests);
+* per-batch p99 fetch latency (loader histogram, virtual clock) and
+  per-request p99 from the executor's new ``ReadStats`` histogram;
+* peak prefetch memory vs the ``window x batch_bytes`` bound, and
+  ``read_many`` chunk-key dedup counters.
+
+Run as ``python -m benchmarks.bench_stream_loader`` to (re)write
+``BENCH_stream_loader.json`` for the regression gate.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import DeltaTensorStore
+from repro.data.stream import StreamLoader
+from repro.data.synthetic import token_stream
+from repro.lake import ReadExecutor
+
+from .common import fresh_store, row
+
+N_TENSORS = 4
+SAMPLES_PER_TENSOR = 128
+SEQ_LEN = 256                   # 1 KiB rows (int32)
+TARGET_FILE_BYTES = 8 << 10     # ~8 rows per chunk file
+BATCH = 16
+WINDOW = 4
+SHARDS = 4
+SEED = 11
+
+
+def _loaded_store(width: int, cache_bytes: int = 0):
+    obj, lm = fresh_store(parallelism=width)
+    io = ReadExecutor(max_workers=width, cache_bytes=cache_bytes)
+    store = DeltaTensorStore(obj, "tensors", io=io, shards=SHARDS)
+    tids = []
+    for i in range(N_TENSORS):
+        tid = f"corpus{i}"
+        tokens = token_stream(SAMPLES_PER_TENSOR, SEQ_LEN, 50_000, seed=i)
+        store.put(tokens.astype(np.int32), layout="ftsf", tensor_id=tid,
+                  chunk_dims=1, target_file_bytes=TARGET_FILE_BYTES)
+        tids.append(tid)
+    return store, lm, tids
+
+
+def _serial_epoch(store, loader: StreamLoader) -> int:
+    """Replay the loader's epoch-0 plan the pre-stream way: pinned refs
+    (as the old ``FTSFLoader`` held) with one awaited ``read_slice`` per
+    coalesced row-run, batch after batch — no cross-run overlap, no
+    cross-request key dedup."""
+    offsets = loader._offsets
+    refs = {t: loader.catalog.open(tid)
+            for t, tid in enumerate(loader.tensor_ids)}
+    batches = 0
+    for step in range(loader.steps_per_epoch):
+        rows = loader._rows_for(0, step)
+        tensor_idx = np.searchsorted(offsets, rows, side="right") - 1
+        for t in np.unique(tensor_idx):
+            local = np.sort(rows[tensor_idx == t] - offsets[t])
+            cuts = np.flatnonzero(np.diff(local) != 1) + 1
+            for run in np.split(local, cuts):
+                refs[int(t)].read_slice([(int(run[0]), int(run[-1]) + 1)])
+        batches += 1
+    for ref in refs.values():
+        ref.close()
+    return batches
+
+
+def run(widths=(1, 8), json_path=None):
+    lines = []
+    results = {"bench": "stream_loader", "batch": BATCH, "window": WINDOW,
+               "shards": SHARDS, "seq_len": SEQ_LEN,
+               "samples": N_TENSORS * SAMPLES_PER_TENSOR,
+               "target_file_bytes": TARGET_FILE_BYTES,
+               "widths": {}, "warm": {}, "gate": {}}
+
+    loader_bps = {}
+    for width in widths:
+        # serial baseline: same plan, eager per-run gets, same width store
+        store, lm, tids = _loaded_store(width)
+        plan_ref = StreamLoader(store, tids, batch_size=BATCH, seed=SEED,
+                                window=WINDOW, epochs=1)
+        lm.reset()
+        store.io.stats.reset()
+        n = _serial_epoch(store, plan_ref)
+        serial_s = lm.elapsed_s
+        serial_bps = n / serial_s
+        plan_ref.close()
+
+        # streaming loader: windowed prefetch + merged read_many plans
+        store, lm, tids = _loaded_store(width)
+        loader = StreamLoader(store, tids, batch_size=BATCH, seed=SEED,
+                              window=WINDOW, epochs=1,
+                              clock=lambda lm=lm: lm.elapsed_s)
+        lm.reset()
+        store.io.stats.reset()
+        batches = sum(1 for _ in loader)
+        loader_s = lm.elapsed_s
+        bps = batches / loader_s
+        loader_bps[width] = bps
+        stats = loader.stats()
+        iostats = store.io_stats()
+        loader.close()
+
+        ratio = bps / serial_bps
+        lines.append(row(f"stream_loader_w{width}", loader_s / batches * 1e6,
+                         f"batches_per_s={bps:.1f} serial={serial_bps:.1f} "
+                         f"ratio={ratio:.2f}x deduped="
+                         f"{iostats['plan_keys_deduped']}"))
+        results["widths"][str(width)] = {
+            "batches": batches,
+            "loader_io_s": loader_s,
+            "loader_batches_per_s": bps,
+            "serial_io_s": serial_s,
+            "serial_batches_per_s": serial_bps,
+            "loader_vs_serial": ratio,
+            "batch_latency": stats["batch_latency"],
+            "request_latency": iostats["latency"],
+            "peak_inflight_bytes": stats["peak_inflight_bytes"],
+            "memory_bound_bytes": stats["memory_bound_bytes"],
+            "plan_keys_fetched": iostats["plan_keys_fetched"],
+            "plan_keys_deduped": iostats["plan_keys_deduped"],
+        }
+
+    # warm-vs-cold: same width-8 store with a block cache; epoch 2 streams
+    # from decoded cached blocks (a fresh loader so no prefetch straddles)
+    store, lm, tids = _loaded_store(8, cache_bytes=256 << 20)
+    cold = StreamLoader(store, tids, batch_size=BATCH, seed=SEED,
+                        window=WINDOW, epochs=1)
+    lm.reset()
+    n_cold = sum(1 for _ in cold)
+    cold_s = lm.elapsed_s
+    cold.close()
+    warm = StreamLoader(store, tids, batch_size=BATCH, seed=SEED,
+                        window=WINDOW, epochs=1)
+    lm.reset()
+    n_warm = sum(1 for _ in warm)
+    warm_s = lm.elapsed_s
+    warm_requests = lm.requests
+    warm.close()
+    warm_ratio = cold_s / warm_s if warm_s > 0 else None
+    lines.append(row("stream_loader_warm_epoch", warm_s / n_warm * 1e6,
+                     f"cold_io_s={cold_s:.3f} warm_io_s={warm_s:.3f} "
+                     f"speedup={warm_ratio or 'inf'} requests={warm_requests}"))
+    results["warm"] = {"cold_io_s": cold_s, "warm_io_s": warm_s,
+                       "warm_requests": warm_requests,
+                       "cold_over_warm": warm_ratio}
+
+    w8 = results["widths"].get("8", {})
+    results["gate"] = {
+        "loader_vs_serial_w8": w8.get("loader_vs_serial"),
+        "batch_p99_s": (w8.get("batch_latency") or {}).get("p99_s"),
+        "request_p99_s": (w8.get("request_latency") or {}).get("p99_s"),
+        "peak_inflight_bytes": w8.get("peak_inflight_bytes"),
+        "memory_bound_bytes": w8.get("memory_bound_bytes"),
+        "memory_bounded": (w8.get("peak_inflight_bytes", 0) <=
+                           w8.get("memory_bound_bytes", 0)),
+    }
+    lines.append(row("stream_loader_gate", 0.0,
+                     f"loader_vs_serial_w8="
+                     f"{results['gate']['loader_vs_serial_w8']:.2f}x "
+                     f"p99={results['gate']['batch_p99_s']} "
+                     f"memory_bounded={results['gate']['memory_bounded']}"))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(json_path="BENCH_stream_loader.json"):
+        print(line)

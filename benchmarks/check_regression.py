@@ -21,7 +21,11 @@ configuration lost a write. Gated metrics:
   ``zlib+shuffle`` chunk-blob codec on the compressible dense-float
   workload (also hard-floored at 2.0x vs raw tensor bytes), and the
   invariant that the compressed store's full-read makespan stays within
-  25% of the uncompressed store's.
+  25% of the uncompressed store's;
+* ``BENCH_stream_loader.json`` — width-8 sustained streaming-loader
+  throughput vs serial awaited gets (also hard-floored at 2.0x), plus
+  the invariants that the per-batch p99 latency is reported non-null and
+  peak prefetch memory stayed within the ``window x batch_bytes`` bound.
 
 Improvements never fail the gate; commit a refreshed baseline JSON when a
 PR deliberately moves a metric.
@@ -47,12 +51,15 @@ GATES = [
      lambda d: float(d["catalog"]["speedup_io"])),
     ("BENCH_compression.json", "zlib+shuffle physical reduction",
      lambda d: float(d["gate"]["reduction"])),
+    ("BENCH_stream_loader.json", "width-8 loader vs serial-gets throughput",
+     lambda d: float(d["gate"]["loader_vs_serial_w8"])),
 ]
 
 # invariants checked on the fresh run only (no baseline comparison)
 MIN_RECLAIMED_FRAC = 0.50
 MIN_COMPRESSION_REDUCTION = 2.0       # vs raw tensor bytes (acceptance)
 MAX_COMPRESSED_READ_OVERHEAD = 1.25   # full-read makespan vs uncompressed
+MIN_LOADER_VS_SERIAL_W8 = 2.0         # streaming loader throughput (acceptance)
 
 
 def _load(path: str) -> dict:
@@ -123,6 +130,28 @@ def main(argv=None) -> int:
             overhead <= MAX_COMPRESSED_READ_OVERHEAD:
         print(f"[OK] compression: {reduction:.2f}x reduction at "
               f"{overhead:.2f}x read makespan")
+
+    loader = _load(os.path.join(args.fresh, "BENCH_stream_loader.json"))
+    lgate = loader["gate"]
+    lratio = float(lgate["loader_vs_serial_w8"])
+    if lratio < MIN_LOADER_VS_SERIAL_W8:
+        print(f"[REGRESSION] w8 loader throughput {lratio:.2f}x serial "
+              f"< hard floor {MIN_LOADER_VS_SERIAL_W8:.2f}x")
+        failures.append("stream loader throughput floor")
+    if lgate.get("batch_p99_s") is None:
+        print("[REGRESSION] stream loader batch p99 latency is null; "
+              "latency histogram must report")
+        failures.append("stream loader p99 missing")
+    if not lgate.get("memory_bounded"):
+        print(f"[REGRESSION] stream loader prefetch exceeded its memory "
+              f"bound: peak={lgate.get('peak_inflight_bytes')} "
+              f"> bound={lgate.get('memory_bound_bytes')}")
+        failures.append("stream loader memory bound")
+    if lratio >= MIN_LOADER_VS_SERIAL_W8 and \
+            lgate.get("batch_p99_s") is not None and lgate.get("memory_bounded"):
+        print(f"[OK] stream loader: {lratio:.2f}x serial at w8, "
+              f"batch p99 {float(lgate['batch_p99_s']):.4f}s, "
+              f"prefetch memory within bound")
 
     if failures:
         print(f"FAIL: {len(failures)} gate(s) regressed: "

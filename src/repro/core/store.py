@@ -582,6 +582,18 @@ class DeltaTensorStore:
         with self.open(tid, version=version) as ref:
             return ref.read_slice(slices)
 
+    def read_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]], *,
+                  version: VersionArg = None,
+                  window: Optional[int] = None) -> List[np.ndarray]:
+        """Read many ``(tid, slices)`` requests through ONE merged fetch
+        plan (see :meth:`~repro.core.catalog.Catalog.read_many`): shared
+        chunk keys are fetched once, adjacent requests' files stream
+        through the windowed executor, and each request decodes as soon
+        as its last file lands. ``slices=None`` reads a tensor in full.
+        Results come back in request order, all pinned to one snapshot.
+        """
+        return self.catalog(version).read_many(requests, window=window)
+
     # -- catalog conveniences -------------------------------------------------
 
     def list_tensors(self, version: VersionArg = None) -> List[Tuple[str, str]]:
@@ -645,6 +657,30 @@ class DeltaTensorStore:
                 "compression": self.compression.id if self.compression
                 else "none",
                 "by_codec": by_codec}
+
+    def io_stats(self) -> Dict[str, Any]:
+        """Read-path counters + per-request latency percentiles — the
+        ``catalog_stats``-style report for the executor this store's
+        fetches run through (shared across stores when it is the process
+        default executor). Latencies are virtual-clock durations on a
+        modeled object store, wall clock otherwise::
+
+            {"gets", "cache_hits", "cache_misses",
+             "hedges_launched", "hedges_won",
+             "plans", "plan_requests",          # read_many scheduling
+             "plan_keys_fetched", "plan_keys_deduped",
+             "latency": {"count", "mean_s", "p50_s", "p95_s",
+                         "p99_s", "max_s"}}
+        """
+        s = self.io.stats
+        return {"gets": s.gets, "cache_hits": s.cache_hits,
+                "cache_misses": s.cache_misses,
+                "hedges_launched": s.hedges_launched,
+                "hedges_won": s.hedges_won,
+                "plans": s.plans, "plan_requests": s.plan_requests,
+                "plan_keys_fetched": s.plan_keys_fetched,
+                "plan_keys_deduped": s.plan_keys_deduped,
+                "latency": s.latency.summary()}
 
     def version(self) -> Union[int, Tuple[int, ...]]:
         """Latest version: an int (1-shard) or the per-shard version vector."""

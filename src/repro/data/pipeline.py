@@ -1,34 +1,35 @@
-"""FTSF-backed training-data pipeline.
+"""FTSF-backed training-data pipeline (compatibility shim).
 
 This is the paper's headline use case (its §V.A discussion): datasets live
 as FTSF chunk rows in a delta table; an SGD batch fetch is a slice read
-that touches only the covering chunk files. The loader adds the
-scale-out machinery:
+that touches only the covering chunk files. The machinery now lives in
+:class:`~repro.data.stream.StreamLoader` — epoch-pinned leased snapshot,
+shard-aware deterministic shuffle, windowed batch prefetch through the
+shared executor, and one merged ``read_many`` fetch plan per batch.
+:class:`FTSFLoader` keeps the original single-tensor token-batch API as a
+thin wrapper over it:
 
-* **per-host sharding**: host *h* of *H* owns sample rows ``h::H`` — each
-  host's reads prune to its own files (no shared-prefix hot-spotting);
-* **prefetch**: up to ``depth`` future batches are fetched ahead as jobs on
-  the shared :class:`~repro.lake.io.ReadExecutor` (no private threads —
-  chunk gets inside each batch also fan out on the same executor);
-* **hedged reads** (straggler mitigation): an optional duplicate attempt
-  for a slow batch fetch via ``ReadExecutor.hedged`` (object-store reads
-  are idempotent, so racing duplicates is safe);
-* **determinism**: batch order is a pure function of (seed, step), so an
-  elastic restart at step *s* replays exactly the remaining stream. The
-  loader holds a snapshot-pinned :class:`~repro.core.catalog.TensorRef`,
-  so even a concurrent writer appending to the dataset table cannot change
-  what this epoch reads (and no batch pays a table-version probe).
+* **per-host sharding**: host *h* of *H* owns sample rows ``h::H``;
+* **prefetch**: ``prefetch_depth`` maps onto the stream loader's batch
+  window (bounded in-flight memory, structural backpressure);
+* **hedged reads**: an optional duplicate attempt for a slow batch fetch
+  (object-store reads are idempotent, so racing duplicates is safe);
+* **determinism**: batch order is a pure function of (seed, epoch), so an
+  elastic restart at ``start_step`` replays exactly the remaining stream;
+* **lifecycle**: context-manager support, and a dropped loader releases
+  its snapshot lease via GC finalizer (mirroring ``TensorRef``) — a
+  forgotten ``close()`` no longer pins the snapshot forever.
 """
 
 from __future__ import annotations
 
-from concurrent.futures import Future
 from typing import Dict, Iterator, Optional
 
 import numpy as np
 
 from ..core.store import DeltaTensorStore
 from ..lake.io import ReadExecutor
+from .stream import StreamLoader
 
 
 def write_token_dataset(store: DeltaTensorStore, tokens: np.ndarray, *,
@@ -41,6 +42,14 @@ def write_token_dataset(store: DeltaTensorStore, tokens: np.ndarray, *,
 
 
 class FTSFLoader:
+    """Single-tensor token-batch loader: the original pipeline API, now a
+    shim over :class:`~repro.data.stream.StreamLoader`.
+
+    Yields ``{"tokens", "labels", "step"}`` dicts where labels are the
+    next-token shift of tokens (−1 fill on the last position) and ``step``
+    is the global step (``start_step`` resumes there deterministically).
+    """
+
     def __init__(self, store: DeltaTensorStore, tensor_id: str, *,
                  batch_size: int, host_index: int = 0, n_hosts: int = 1,
                  seed: int = 0, prefetch_depth: int = 2,
@@ -52,63 +61,47 @@ class FTSFLoader:
         self.host = host_index
         self.n_hosts = n_hosts
         self.hedge_after_s = hedge_after_s
-        self.io = io or store.io
-        # pin the dataset version for the lifetime of this loader
-        self.ref = store.open(tensor_id)
-        n_samples = self.ref.shape[0]
-        self.owned = np.arange(n_samples)[host_index::n_hosts]
-        if len(self.owned) < batch_size:
-            raise ValueError("fewer owned samples than batch size")
+        self._stream = StreamLoader(
+            store, tensor_id, batch_size=batch_size,
+            host_index=host_index, n_hosts=n_hosts, seed=seed,
+            window=max(1, prefetch_depth), hedge_after_s=hedge_after_s,
+            io=io)
+        self.io = self._stream.io
         self.seed = seed
-        self.step = start_step
-        self.depth = max(1, prefetch_depth)
-        self._pending: Dict[int, Future] = {}
-        self._closed = False
+        if start_step:
+            self._stream.seek(*divmod(int(start_step),
+                                      self._stream.steps_per_epoch))
 
-    # deterministic sample plan: pure function of (seed, step)
-    def _plan(self, step: int) -> np.ndarray:
-        rng = np.random.default_rng((self.seed * 1_000_003 + step) & 0x7FFFFFFF)
-        return np.sort(rng.choice(self.owned, size=self.batch, replace=False))
+    @property
+    def owned(self) -> np.ndarray:
+        """Sample rows this host owns (``host_index::n_hosts``)."""
+        return self._stream.owned
 
-    def _fetch(self, step: int) -> np.ndarray:
-        rows = self._plan(step)
-        # coalesce consecutive rows into range slice reads (file pruning)
-        parts = []
-        run_start = rows[0]
-        prev = rows[0]
-        for r in rows[1:]:
-            if r != prev + 1:
-                parts.append((run_start, prev + 1))
-                run_start = r
-            prev = r
-        parts.append((run_start, prev + 1))
-
-        def read(a, b):
-            fn = lambda: self.ref.read_slice([(int(a), int(b))])
-            if self.hedge_after_s is not None:
-                return self.io.hedged(fn, hedge_after_s=self.hedge_after_s)
-            return fn()
-
-        return np.concatenate([read(a, b) for a, b in parts], axis=0)
-
-    def _ensure_prefetch(self) -> None:
-        for step in range(self.step, self.step + self.depth):
-            if step not in self._pending:
-                self._pending[step] = self.io.submit(self._fetch, step)
+    @property
+    def step(self) -> int:
+        """Global step of the next batch to yield."""
+        epoch, s = self._stream.cursor
+        return epoch * self._stream.steps_per_epoch + s
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        while not self._closed:
-            self._ensure_prefetch()
-            step = self.step
-            tokens = self._pending.pop(step).result()
-            self.step = step + 1
+        for b in self._stream:
+            tokens = b["data"]
             labels = np.concatenate([tokens[:, 1:],
                                      np.full((len(tokens), 1), -1, np.int32)],
                                     axis=1)
-            yield {"tokens": tokens, "labels": labels, "step": step}
+            yield {"tokens": tokens, "labels": labels, "step": b["step"]}
 
-    def close(self):
-        self._closed = True
-        for fut in self._pending.values():
-            fut.cancel()
-        self._pending.clear()
+    def close(self) -> None:
+        """Cancel prefetch and release the snapshot lease (idempotent)."""
+        self._stream.close()
+
+    @property
+    def closed(self) -> bool:
+        """Whether the snapshot lease has been released."""
+        return self._stream.closed
+
+    def __enter__(self) -> "FTSFLoader":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

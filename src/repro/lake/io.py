@@ -29,12 +29,15 @@ weight loading) funnels its object-store fetches through one
 from __future__ import annotations
 
 import itertools
+import math
 import queue
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 from .compression import decode_frame, is_framed
 
@@ -72,6 +75,111 @@ def store_scope(store: Any) -> tuple:
     return ("instance", _store_token(store))
 
 
+class LatencyHistogram:
+    """Thread-safe log-bucketed latency histogram with quantile accessors.
+
+    Buckets are geometric (HDR-histogram style): ~4% relative resolution
+    from 1 µs up past 1000 s in O(1) memory, so recording a sample is a
+    lock + an integer increment — cheap enough to sit on every object get.
+    Quantiles interpolate inside the winning bucket, which keeps p50/p95/
+    p99 honest to within one bucket width. On the modeled object store the
+    recorded samples are **virtual-clock** durations (queueing + RTT +
+    transfer, see :meth:`LatencyModel.request_latency_s`), so benchmark
+    tail latencies are deterministic rather than scheduler noise.
+    """
+
+    MIN_S = 1e-6
+    GROWTH = 1.04
+    N_BUCKETS = 560  # MIN_S * GROWTH**560 ≈ 3.3e3 s — covers any sane read
+
+    def __init__(self):
+        self._counts = [0] * self.N_BUCKETS
+        self._count = 0
+        self._sum = 0.0
+        self._max = 0.0
+        self._lock = threading.Lock()
+
+    def _bucket(self, seconds: float) -> int:
+        if seconds <= self.MIN_S:
+            return 0
+        b = int(math.log(seconds / self.MIN_S) / math.log(self.GROWTH))
+        return min(b, self.N_BUCKETS - 1)
+
+    def observe(self, seconds: float) -> None:
+        """Record one latency sample (negative samples clamp to 0)."""
+        s = max(0.0, float(seconds))
+        with self._lock:
+            self._counts[self._bucket(s)] += 1
+            self._count += 1
+            self._sum += s
+            if s > self._max:
+                self._max = s
+
+    @property
+    def count(self) -> int:
+        """Number of recorded samples."""
+        with self._lock:
+            return self._count
+
+    @property
+    def mean(self) -> float:
+        """Mean recorded latency in seconds (0.0 when empty)."""
+        with self._lock:
+            return self._sum / self._count if self._count else 0.0
+
+    @property
+    def max(self) -> float:
+        """Largest recorded sample in seconds."""
+        with self._lock:
+            return self._max
+
+    def quantile(self, q: float) -> Optional[float]:
+        """The ``q`` quantile (0..1) in seconds; None when empty.
+
+        Returns the bucket's geometric midpoint, capped at the observed
+        max so p99 of a single-valued distribution equals that value.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        with self._lock:
+            if self._count == 0:
+                return None
+            rank = q * (self._count - 1)
+            seen = 0
+            for b, c in enumerate(self._counts):
+                seen += c
+                if seen > rank:
+                    lo = self.MIN_S * self.GROWTH ** b
+                    return min(lo * math.sqrt(self.GROWTH), self._max)
+            return self._max  # pragma: no cover - rank < count always hits
+
+    def p50(self) -> Optional[float]:
+        """Median latency in seconds (None when empty)."""
+        return self.quantile(0.50)
+
+    def p95(self) -> Optional[float]:
+        """95th-percentile latency in seconds (None when empty)."""
+        return self.quantile(0.95)
+
+    def p99(self) -> Optional[float]:
+        """99th-percentile latency in seconds (None when empty)."""
+        return self.quantile(0.99)
+
+    def summary(self) -> Dict[str, Optional[float]]:
+        """``{count, mean_s, p50_s, p95_s, p99_s, max_s}`` for reporting."""
+        return {"count": self.count, "mean_s": self.mean,
+                "p50_s": self.p50(), "p95_s": self.p95(),
+                "p99_s": self.p99(), "max_s": self.max}
+
+    def reset(self) -> None:
+        """Drop every recorded sample (benchmark epochs)."""
+        with self._lock:
+            self._counts = [0] * self.N_BUCKETS
+            self._count = 0
+            self._sum = 0.0
+            self._max = 0.0
+
+
 @dataclass
 class ReadStats:
     """Counters for the read path (thread-safe)."""
@@ -86,6 +194,18 @@ class ReadStats:
     frames_decoded: int = 0
     frame_bytes_wire: int = 0
     frame_bytes_decoded: int = 0
+    # read_many fetch scheduling: merged plans built, requests they
+    # covered, unique keys actually fetched, and references that were
+    # deduplicated away (a shared chunk key counted once per extra
+    # requester) — the "shared chunk fetched once per plan" claim
+    plans: int = 0
+    plan_requests: int = 0
+    plan_keys_fetched: int = 0
+    plan_keys_deduped: int = 0
+    # per-request latency histogram (virtual-clock durations on a modeled
+    # store, wall-clock otherwise); see LatencyHistogram
+    latency: LatencyHistogram = field(default_factory=LatencyHistogram,
+                                      repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def bump(self, **deltas: int) -> None:
@@ -101,6 +221,9 @@ class ReadStats:
             self.hedges_launched = self.hedges_won = 0
             self.frames_decoded = 0
             self.frame_bytes_wire = self.frame_bytes_decoded = 0
+            self.plans = self.plan_requests = 0
+            self.plan_keys_fetched = self.plan_keys_deduped = 0
+        self.latency.reset()
 
 
 class BlockCache:
@@ -183,11 +306,25 @@ class ReadExecutor:
 
     # -- raw gets ------------------------------------------------------------
 
+    def _timed_get(self, store: Any, key: str) -> bytes:
+        # one *attempt* = one histogram sample (hedged retries each record
+        # their own latency on their own thread). On a modeled store the
+        # sample is the deterministic virtual-clock duration of this
+        # request (queueing + RTT + transfer); otherwise wall clock.
+        t0 = time.perf_counter()
+        data = store.get(key)
+        lm = getattr(store, "latency", None)
+        lat = getattr(lm, "request_latency_s", lambda: None)()
+        if lat is None:
+            lat = time.perf_counter() - t0
+        self.stats.latency.observe(lat)
+        return data
+
     def _get_raw(self, store: Any, key: str) -> bytes:
         self.stats.bump(gets=1)
         if self.hedge_after_s is None or self.hedge_attempts <= 1:
-            return store.get(key)
-        return self.hedged(lambda: store.get(key),
+            return self._timed_get(store, key)
+        return self.hedged(lambda: self._timed_get(store, key),
                            hedge_after_s=self.hedge_after_s,
                            attempts=self.hedge_attempts)
 
@@ -220,15 +357,20 @@ class ReadExecutor:
         return self._io.submit(self._fetch_miss, store, key, ck).result()
 
     def fetch_ordered(self, store: Any, keys: Sequence[str], *,
-                      cacheable: bool = True) -> Iterator[bytes]:
+                      cacheable: bool = True,
+                      window: Optional[int] = None) -> Iterator[bytes]:
         """Fetch ``keys`` concurrently, yield results in input order.
 
-        Submission is windowed at ``2 * max_workers`` outstanding gets so a
-        scan over thousands of files doesn't swamp the pool queue; decode of
-        block *i* overlaps the in-flight fetches of blocks > *i*.
+        Submission is windowed (default ``2 * max_workers`` outstanding
+        gets) so a scan over thousands of files doesn't swamp the pool
+        queue or starve concurrent readers; decode of block *i* overlaps
+        the in-flight fetches of blocks > *i*. Pass ``window=`` to bound
+        it explicitly — the stream loader's backpressure rides on this.
         """
         keys = list(keys)
-        window = max(2 * self.max_workers, 2)
+        if window is None:
+            window = 2 * self.max_workers
+        window = max(int(window), 2)
         pending: List[Future] = []
 
         def submit(key: str) -> Future:

@@ -177,6 +177,7 @@ class LatencyModel:
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _channels: list = field(default_factory=list, repr=False)
     _thread_done: dict = field(default_factory=dict, repr=False)
+    _thread_latency: dict = field(default_factory=dict, repr=False)
     _transfer_s: float = field(default=0.0, repr=False)
 
     def charge(self, nbytes: int) -> None:
@@ -194,12 +195,21 @@ class LatencyModel:
             self.serial_s += cost
             if self.parallelism <= 1:
                 self.elapsed_s += cost
+                self._thread_latency[tid] = cost
             else:
                 if len(self._channels) != self.parallelism:
                     self._channels = [0.0] * self.parallelism
                 i = min(range(self.parallelism), key=self._channels.__getitem__)
-                start = max(self._channels[i], self._thread_done.get(tid, 0.0))
+                prev = self._thread_done.get(tid)
+                start = max(self._channels[i], prev or 0.0)
                 done = start + cost
+                # request latency as the caller experiences it: from the
+                # moment this thread became free (its previous request's
+                # completion — or now, for its first request) until this
+                # one finishes. Queueing behind busy channels is latency;
+                # the thread's own earlier work is not.
+                ready = prev if prev is not None else self._channels[i]
+                self._thread_latency[tid] = done - ready
                 self._channels[i] = done
                 self._thread_done[tid] = done
                 self._transfer_s += transfer
@@ -208,6 +218,19 @@ class LatencyModel:
             time.sleep(cost)
         elif self.occupancy_scale > 0.0:
             time.sleep(cost * self.occupancy_scale)
+
+    def request_latency_s(self) -> Optional[float]:
+        """Virtual-clock latency of the calling thread's last request.
+
+        Read by the :class:`~repro.lake.io.ReadExecutor` right after a
+        ``get`` returns, so latency histograms on modeled stores record
+        deterministic virtual durations instead of wall-clock noise.
+        Returns None if this thread has not issued a request (or in
+        real-sleep mode, where wall clock is already the truth)."""
+        if not self.virtual_clock:
+            return None
+        with self._lock:
+            return self._thread_latency.get(threading.get_ident())
 
     def reset(self) -> None:
         """Zero the accumulated time/request/byte accounting."""
@@ -218,6 +241,7 @@ class LatencyModel:
             self.bytes_moved = 0
             self._channels = []
             self._thread_done = {}
+            self._thread_latency = {}
             self._transfer_s = 0.0
 
 

@@ -172,6 +172,19 @@ def _apply_mask(batch: Dict[str, Any], mask: Optional[np.ndarray]) -> Dict[str, 
     return out
 
 
+def filter_rows(batch: Dict[str, Any],
+                filters: Optional[Filters]) -> Dict[str, Any]:
+    """Row-wise filter application on one decoded column batch.
+
+    The public face of the scan path's mask step, for consumers that fetch
+    and decode blocks themselves (the catalog's ``read_many`` scheduler
+    decodes each shared file ONCE, then applies each request's own filters
+    to the same decoded batch). No filters (or an all-true mask) returns
+    the batch unchanged, so sharing the dict across requests stays safe.
+    """
+    return _apply_mask(batch, _row_mask(batch, filters))
+
+
 def _columns_itemsize(columns: Dict[str, Any]) -> int:
     """Best-effort shuffle itemsize for a decoded column dict.
 

@@ -6,10 +6,12 @@ Per-slot KV caches live in one batched cache pytree, so decode is a single
 jit'd step for the whole batch regardless of request boundaries.
 
 Weights live in the Delta Tensor store as one FTSF tensor per param leaf;
-:func:`load_weights` fetches every leaf concurrently through the shared
-:class:`~repro.lake.io.ReadExecutor` (each leaf's chunk files additionally
-fan out on the same executor), so cold-start weight load time is the
-makespan of parallel object-store gets, not the serial sum.
+:func:`load_weights` pulls the whole tree through one merged
+``Catalog.read_many`` fetch plan on the shared
+:class:`~repro.lake.io.ReadExecutor` — deduplicated keys, windowed
+submission, per-leaf decode overlapping in-flight fetches — so cold-start
+weight load time is the makespan of parallel object-store gets, not the
+serial sum.
 """
 
 from __future__ import annotations
@@ -56,18 +58,20 @@ def load_weights(store: DeltaTensorStore, template: Any, *,
     """Load a param pytree saved by :func:`save_weights`.
 
     ``template`` (e.g. ``jax.eval_shape`` of ``init_params``, or a real
-    params pytree) supplies the tree structure and leaf dtypes. Every leaf
-    is opened as a :class:`~repro.core.catalog.TensorRef` from ONE pinned
-    catalog (a consistent weight generation even if a re-save lands
-    mid-load) and resolved as parallel futures on the shared executor.
+    params pytree) supplies the tree structure and leaf dtypes. The whole
+    tree loads through ONE merged fetch plan
+    (:meth:`~repro.core.catalog.Catalog.read_many`) against one pinned
+    catalog — a consistent weight generation even if a re-save lands
+    mid-load, with any chunk file shared across leaves fetched once and
+    each leaf decoding as soon as its last file arrives.
     """
     io = io or store.io
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     catalog = store.catalog()
-    refs = [catalog.open(f"{prefix}/{_leaf_name(p)}") for p, _ in flat]
-    futures = [io.submit(ref.read) for ref in refs]
-    out = [f.result().astype(np.dtype(leaf.dtype), copy=False)
-           for f, (_, leaf) in zip(futures, flat)]
+    arrays = catalog.read_many(
+        [(f"{prefix}/{_leaf_name(p)}", None) for p, _ in flat])
+    out = [arr.astype(np.dtype(leaf.dtype), copy=False)
+           for arr, (_, leaf) in zip(arrays, flat)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -4,9 +4,10 @@ Every train-state leaf is stored as FTSF chunk rows in one delta table;
 a checkpoint step is ONE atomic :class:`~repro.core.batch.WriteBatch`
 commit (two-phase: upload all part files, then commit), so a crash
 mid-write leaves the previous checkpoint intact — the delta log's
-put-if-absent commit is the recovery line. Restores open every leaf as a
-:class:`~repro.core.catalog.TensorRef` from ONE catalog snapshot and
-resolve the reads as parallel futures.
+put-if-absent commit is the recovery line. Restores pull the whole leaf
+tree through ONE catalog snapshot and ONE merged
+:meth:`~repro.core.catalog.Catalog.read_many` fetch plan (shared chunk
+files fetch once; per-leaf decode overlaps in-flight fetches).
 
 Features aimed at the 1000-node posture:
 * **incremental**: per-leaf content hashes; unchanged leaves are not
@@ -178,18 +179,21 @@ class DeltaCheckpointer:
         step_found, manifest = self._manifest(
             step, version=None if pinned is None else pinned[0])
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-        # every leaf ref comes from ONE catalog snapshot (consistent restore
-        # even under concurrent writers) and resolves as a parallel future
+        # the whole tree restores through ONE catalog snapshot and ONE
+        # merged fetch plan (consistent restore even under concurrent
+        # writers): chunk files shared across leaves — incremental saves
+        # re-point unchanged leaves at the same tids — fetch once, and
+        # each leaf decodes as soon as its last file lands
         catalog = self.store.catalog(pinned)
-        futures = []
-        for path, leaf in flat:
+        requests = []
+        for path, _ in flat:
             name = _path_str(path)
-            ref = catalog.open(manifest[name])
-            futures.append(ref.read_async(
-                shard_slices[name] if shard_slices and name in shard_slices
-                else None))
-        out = [f.result().astype(np.dtype(leaf.dtype), copy=False)
-               for f, (_, leaf) in zip(futures, flat)]
+            requests.append((manifest[name],
+                             shard_slices[name] if shard_slices
+                             and name in shard_slices else None))
+        arrays = catalog.read_many(requests)
+        out = [arr.astype(np.dtype(leaf.dtype), copy=False)
+               for arr, (_, leaf) in zip(arrays, flat)]
         return step_found, jax.tree_util.tree_unflatten(
             treedef, out)
 

@@ -1,0 +1,239 @@
+"""StreamLoader: deterministic shuffled streaming over leased snapshots,
+windowed prefetch memory bounds, shard-interleave fairness, and the
+``read_many`` cross-tensor fetch scheduler it rides on."""
+
+import gc
+
+import numpy as np
+import pytest
+
+from repro.core import DeltaTensorStore
+from repro.data.stream import StreamLoader
+from repro.data.synthetic import token_stream
+from repro.lake import InMemoryObjectStore, ReadExecutor
+from repro.lake.io import LatencyHistogram
+
+
+def _store(shards=1, io=None, n_tensors=1, samples=64, seq=16):
+    store = DeltaTensorStore(InMemoryObjectStore(), "tensors",
+                             io=io, shards=shards)
+    tids = []
+    for i in range(n_tensors):
+        tid = f"ds{i}"
+        tokens = token_stream(samples, seq, 1000, seed=i)
+        store.put(tokens.astype(np.int32), layout="ftsf", tensor_id=tid,
+                  chunk_dims=1, target_file_bytes=4 << 10)
+        tids.append(tid)
+    return store, tids
+
+
+def _collect(loader):
+    return [(b["epoch"], b["step"], b["samples"].copy(), b["data"].copy())
+            for b in loader]
+
+
+# ---------------------------------------------------------------------------
+# determinism + resumability
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_plan_deterministic_and_distinct_across_epochs():
+    store, tids = _store(n_tensors=2)
+    with StreamLoader(store, tids, batch_size=8, seed=3, epochs=2) as a:
+        run_a = _collect(a)
+    with StreamLoader(store, tids, batch_size=8, seed=3, epochs=2) as b:
+        run_b = _collect(b)
+    assert len(run_a) == len(run_b) == 2 * a.steps_per_epoch
+    for (ea, sa, ra, da), (eb, sb, rb, db) in zip(run_a, run_b):
+        assert (ea, sa) == (eb, sb)
+        np.testing.assert_array_equal(ra, rb)
+        np.testing.assert_array_equal(da, db)
+    # epoch 1 reshuffles (covers the same sample set in a different order)
+    e0 = np.concatenate([r for e, _, r, _ in run_a if e == 0])
+    e1 = np.concatenate([r for e, _, r, _ in run_a if e == 1])
+    np.testing.assert_array_equal(np.sort(e0), np.sort(e1))
+    assert not np.array_equal(e0, e1)
+
+
+def test_resume_from_cursor_replays_exact_tail():
+    store, tids = _store(n_tensors=2)
+    with StreamLoader(store, tids, batch_size=8, seed=9, epochs=2) as full:
+        whole = _collect(full)
+    with StreamLoader(store, tids, batch_size=8, seed=9, epochs=2,
+                      start_cursor=(0, 3)) as resumed:
+        tail = _collect(resumed)
+    assert len(tail) == len(whole) - 3
+    for (ea, sa, ra, da), (eb, sb, rb, db) in zip(whole[3:], tail):
+        assert (ea, sa) == (eb, sb)
+        np.testing.assert_array_equal(ra, rb)
+        np.testing.assert_array_equal(da, db)
+
+
+def test_cursor_property_and_seek():
+    store, tids = _store()
+    loader = StreamLoader(store, tids, batch_size=8, seed=0, epochs=4)
+    it = iter(loader)
+    next(it); next(it)
+    assert loader.cursor == (0, 2)
+    loader.seek(2, 1)
+    b = next(iter(loader))
+    assert (b["epoch"], b["step"]) == (2, 2 * loader.steps_per_epoch + 1)
+    np.testing.assert_array_equal(b["samples"], loader._rows_for(2, 1))
+    loader.close()
+
+
+# ---------------------------------------------------------------------------
+# snapshot isolation + lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_isolation_under_concurrent_writer():
+    store, tids = _store(samples=32, seq=8)
+    original = store.get(tids[0]).copy()
+    loader = StreamLoader(store, tids, batch_size=8, seed=1, epochs=1)
+    # a writer overwrites the dataset and vacuum runs mid-stream; the
+    # loader's leased snapshot keeps every batch reading the original
+    store.put(original + 1, layout="ftsf", tensor_id=tids[0],
+              chunk_dims=1, target_file_bytes=4 << 10, overwrite=True)
+    store.vacuum(keep_versions=1, ttl_s=0.0)
+    seen = np.empty_like(original)
+    for b in loader:
+        seen[b["samples"]] = b["data"]
+    np.testing.assert_array_equal(seen, original)
+    loader.close()
+    # after release the new generation is what a fresh reader sees
+    np.testing.assert_array_equal(store.get(tids[0]), original + 1)
+
+
+def test_dropped_loader_releases_lease_via_finalizer():
+    store, tids = _store(samples=16, seq=8)
+    loader = StreamLoader(store, tids, batch_size=4)
+    vec = loader.catalog.version_vector
+    assert store.leases.leased_versions(0)
+    del loader
+    gc.collect()
+    assert not store.leases.leased_versions(0), vec
+
+
+def test_context_manager_closes():
+    store, tids = _store(samples=16, seq=8)
+    with StreamLoader(store, tids, batch_size=4) as loader:
+        assert not loader.closed
+    assert loader.closed
+    loader.close()  # idempotent
+
+
+def test_incompatible_row_shapes_rejected():
+    store = DeltaTensorStore(InMemoryObjectStore(), "tensors")
+    store.put(token_stream(8, 16, 100).astype(np.int32), layout="ftsf",
+              tensor_id="a", chunk_dims=1)
+    store.put(token_stream(8, 32, 100).astype(np.int32), layout="ftsf",
+              tensor_id="b", chunk_dims=1)
+    with pytest.raises(ValueError, match="incompatible"):
+        StreamLoader(store, ["a", "b"], batch_size=4)
+
+
+# ---------------------------------------------------------------------------
+# prefetch memory bound
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_memory_bounded_by_window():
+    store, tids = _store(n_tensors=2, samples=64)
+    with StreamLoader(store, tids, batch_size=8, window=3, epochs=2) as loader:
+        for _ in loader:
+            assert loader.inflight_bytes <= 3 * loader.batch_bytes
+        stats = loader.stats()
+    assert stats["peak_inflight_bytes"] <= stats["memory_bound_bytes"]
+    assert stats["memory_bound_bytes"] == 3 * loader.batch_bytes
+    assert stats["inflight_bytes"] == 0
+    assert stats["batch_latency"]["count"] == stats["batches_yielded"]
+
+
+# ---------------------------------------------------------------------------
+# shard-aware interleave
+# ---------------------------------------------------------------------------
+
+
+def test_shard_interleave_fairness():
+    # four equal tensors, one per shard table of a 4-shard store: every
+    # batch must spread its rows across all shards, not drain one table's
+    # files at a time. Placement is hash-routed, so pick ids per shard.
+    store = DeltaTensorStore(InMemoryObjectStore(), "tensors", shards=4)
+    by_shard = {}
+    i = 0
+    while len(by_shard) < 4:
+        by_shard.setdefault(store.router.shard_of(f"ds{i}"), f"ds{i}")
+        i += 1
+    tids = [by_shard[s] for s in sorted(by_shard)]
+    for j, tid in enumerate(tids):
+        store.put(token_stream(32, 8, 1000, seed=j).astype(np.int32),
+                  layout="ftsf", tensor_id=tid, chunk_dims=1,
+                  target_file_bytes=4 << 10)
+    catalog = store.catalog()
+    shard_by_tensor = np.asarray([catalog.entry(t).shard for t in tids])
+    assert len(set(shard_by_tensor.tolist())) == 4
+    with StreamLoader(store, tids, batch_size=16, seed=4, epochs=1) as loader:
+        for b in loader:
+            t_idx = np.searchsorted(loader._offsets, b["samples"],
+                                    side="right") - 1
+            counts = np.bincount(shard_by_tensor[t_idx], minlength=4)
+            # proportional interleave: 16 rows over 4 equal shards ~> 4 each
+            assert counts.min() >= 2 and counts.max() <= 6, counts
+
+
+# ---------------------------------------------------------------------------
+# read_many fetch scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_read_many_matches_serial_reads_and_dedups_chunks():
+    io = ReadExecutor(max_workers=4, cache_bytes=0)  # no cache: count real gets
+    store, tids = _store(io=io, n_tensors=2, samples=32, seq=8)
+    tid = tids[0]
+    expect_a = store.get_slice(tid, [(0, 4)])
+    expect_b = store.get_slice(tid, [(2, 8)])
+    expect_c = store.get(tids[1])
+    io.stats.reset()
+    got = store.read_many([(tid, [(0, 4)]), (tid, [(2, 8)]), (tids[1], None)])
+    np.testing.assert_array_equal(got[0], expect_a)
+    np.testing.assert_array_equal(got[1], expect_b)
+    np.testing.assert_array_equal(got[2], expect_c)
+    s = store.io_stats()
+    assert s["plans"] == 1 and s["plan_requests"] == 3
+    # overlapping slices share chunk files: the plan fetched each once
+    assert s["plan_keys_deduped"] >= 1
+    assert s["gets"] == s["plan_keys_fetched"]
+
+
+def test_loader_records_dedup_through_read_many():
+    io = ReadExecutor(max_workers=4, cache_bytes=0)
+    store, tids = _store(io=io, n_tensors=2, samples=64)
+    with StreamLoader(store, tids, batch_size=8, seed=2, epochs=1) as loader:
+        io.stats.reset()
+        n = sum(1 for _ in loader)
+    s = store.io_stats()
+    assert n == loader.steps_per_epoch
+    assert s["plans"] == n                      # one merged plan per batch
+    assert s["latency"]["count"] == s["gets"]   # every get observed
+    assert s["latency"]["p99_s"] is not None
+
+
+# ---------------------------------------------------------------------------
+# latency histogram
+# ---------------------------------------------------------------------------
+
+
+def test_latency_histogram_quantiles():
+    h = LatencyHistogram()
+    for ms in range(1, 101):
+        h.observe(ms / 1000.0)
+    assert h.count == 100
+    assert h.p50() == pytest.approx(0.050, rel=0.10)
+    assert h.p99() == pytest.approx(0.100, rel=0.10)
+    assert h.max == pytest.approx(0.100, rel=1e-6)
+    assert 0.040 < h.mean < 0.060
+    s = h.summary()
+    assert s["count"] == 100 and s["p95_s"] == pytest.approx(0.095, rel=0.10)
+    h.reset()
+    assert h.count == 0 and h.p50() is None
