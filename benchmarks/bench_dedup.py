@@ -1,0 +1,224 @@
+"""Content-addressed dedup + model-variant delta storage: space accounting.
+
+The fine-tuned-model claim of the CAS subsystem, measured on the paper's
+modeled object store (1 Gbps, 10 ms RTT, virtual clock):
+
+* **variant fan-out** — one base model plus ``VARIANTS`` fine-tunes, each
+  perturbing a ~5% contiguous slab of the weights. Stored naively
+  (``dedup=False``, plain ``put`` per variant) every variant re-uploads
+  the full model; stored through ``put_variant`` the unchanged chunks
+  dedup into references and the changed chunks XOR-delta against the
+  base's objects. The acceptance floor: 8 variants cost <= 2.5x the
+  base's physical bytes (vs 9x naive), and every variant reads back
+  byte-identical both ways.
+
+* **churn reclamation is exact** — deleting half the variants and
+  vacuuming reclaims exactly the objects referenced ONLY by the deleted
+  variants: every surviving tensor's objects (including shared dedup'd
+  chunks and delta bases) stay put, byte-for-byte.
+
+* **lease safety under churn** — refs opened before the delete+vacuum
+  keep reading identical bytes throughout.
+
+With ``--json`` (or :func:`run`'s ``json_path``) results land in
+``BENCH_dedup.json`` so ``check_regression.py`` can gate PRs.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import DeltaTensorStore
+from repro.lake import ReadExecutor
+from repro.lake.table import physical_path
+
+from .common import fresh_store, row
+
+SHAPE = (32, 64, 64)           # 512 KiB of f32 weights per model
+VARIANTS = 8
+DELETE_VARIANTS = 4
+TARGET_FILE_BYTES = 64 << 10   # many chunk files -> per-chunk dedup matters
+SLAB = 2                       # leading-axis rows each variant perturbs (~6%)
+
+MAX_VARIANTS_VS_BASE = 2.5     # acceptance: 8 variants <= 2.5x base physical
+
+
+def _weights(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(SHAPE)
+    return (np.round(x * 64) / 64).astype(np.float32)
+
+
+def _variant(base, i):
+    v = base.copy()
+    lo = (i * SLAB) % (SHAPE[0] - SLAB)
+    v[lo:lo + SLAB] += 1.0 / (i + 2)
+    return v
+
+
+def _data_bytes(obj, root):
+    return sum(obj.head(k) for k in obj.list(f"{root}/")
+               if "_delta_log" not in k and "/_catalog/" not in k
+               and "/_cas/" not in k and "_store_manifest" not in k)
+
+
+def _object_keys(store):
+    """tensor id -> set of object keys its latest add-actions reference."""
+    refs = {}
+    cat = store.catalog()
+    for tid in cat:
+        entry = cat.entry(tid)
+        keys = set()
+        for a in entry.header_adds + entry.chunk_adds:
+            keys.add(f"{store.tables[entry.shard].path}/{physical_path(a)}")
+            if a.get("deltaBase"):
+                keys.add(a["deltaBase"])
+        refs[tid] = keys
+    return refs
+
+
+def _store(obj, root, dedup=True):
+    io = ReadExecutor(max_workers=8, cache_bytes=0)
+    return DeltaTensorStore(obj, root, io=io, compression="zlib+shuffle",
+                            dedup=dedup)
+
+
+def variant_fanout():
+    base = _weights(0)
+    variants = [_variant(base, i) for i in range(VARIANTS)]
+
+    # naive: every variant is an independent full put
+    obj_n, lm_n = fresh_store(parallelism=8)
+    naive = _store(obj_n, "naive", dedup=False)
+    naive.put(base, tensor_id="m", layout="ftsf",
+              target_file_bytes=TARGET_FILE_BYTES)
+    naive_base = _data_bytes(obj_n, "naive")
+    lm_n.reset()
+    for i, v in enumerate(variants):
+        naive.put(v, tensor_id=f"m-ft{i}", layout="ftsf",
+                  target_file_bytes=TARGET_FILE_BYTES)
+    naive_total = _data_bytes(obj_n, "naive")
+    naive_upload = lm_n.bytes_moved   # pure uploads
+
+    # CAS: variants delta-encode against the base's objects
+    obj_d, lm_d = fresh_store(parallelism=8)
+    store = _store(obj_d, "cas")
+    store.put(base, tensor_id="m", layout="ftsf",
+              target_file_bytes=TARGET_FILE_BYTES)
+    base_phys = _data_bytes(obj_d, "cas")
+    lm_d.reset()
+    for i, v in enumerate(variants):
+        store.put_variant(v, base_tid="m", tensor_id=f"m-ft{i}",
+                          target_file_bytes=TARGET_FILE_BYTES)
+    total_phys = _data_bytes(obj_d, "cas")
+    dedup_upload = lm_d.bytes_moved   # delta uploads + base-blob reads
+
+    for i, v in enumerate(variants):  # both stores read back exactly
+        assert np.array_equal(store.get(f"m-ft{i}"), v)
+        assert np.array_equal(naive.get(f"m-ft{i}"), v)
+
+    stats = store.storage_stats()
+    return store, obj_d, variants, base, {
+        "variants": VARIANTS,
+        "naive_base_bytes": naive_base,
+        "naive_total_bytes": naive_total,
+        "base_physical_bytes": base_phys,
+        "total_physical_bytes": total_phys,
+        "variants_vs_base_ratio": (total_phys - base_phys) / base_phys,
+        "naive_vs_dedup": naive_total / total_phys,
+        "wire_bytes_naive": naive_upload,
+        "wire_bytes_dedup": dedup_upload,
+        "dedup": stats["dedup"],
+        "logical_bytes": stats["logical_bytes"],
+        "physical_bytes": stats["physical_bytes"],
+    }
+
+
+def churn(store, obj, variants, base):
+    # steady state first so the churn delta is attributable to the delete
+    store.vacuum(keep_versions=1)
+    refs_before = _object_keys(store)
+    doomed_tids = [f"m-ft{i}" for i in range(DELETE_VARIANTS)]
+    survivors = {t: k for t, k in refs_before.items() if t not in doomed_tids}
+    survivor_keys = set().union(*survivors.values())
+    expected_reclaim = set().union(
+        *(refs_before[t] for t in doomed_tids)) - survivor_keys
+
+    # leased refs opened BEFORE the churn must read identically after it
+    leased = [store.open("m"), store.open(f"m-ft{VARIANTS - 1}")]
+
+    for t in doomed_tids:
+        store.delete(t)
+    # pass 1 runs under the leases: they pin the pre-delete snapshot, so
+    # the doomed variants' objects are NOT reclaimable yet (lease safety)
+    pass1 = store.vacuum(keep_versions=1)
+    leased_ok = (np.array_equal(leased[0].read(), base) and
+                 np.array_equal(leased[1].read(), variants[VARIANTS - 1]))
+    for ref in leased:
+        ref.close()
+    # pass 2 after release: now exactly the doomed-only objects go
+    pass2 = store.vacuum(keep_versions=1)
+    results = pass1 + pass2
+    deleted = {f"{store.tables[s % store.shards].path}/{p}"
+               for s, r in enumerate(results) for p in r.deleted_paths}
+
+    reclaim_exact = deleted == expected_reclaim
+
+    # survivors still read exactly after lease release + final vacuum
+    survivors_ok = np.array_equal(store.get("m"), base) and all(
+        np.array_equal(store.get(f"m-ft{i}"), variants[i])
+        for i in range(DELETE_VARIANTS, VARIANTS))
+
+    return {
+        "deleted_variants": DELETE_VARIANTS,
+        "files_reclaimed": sum(r.files_deleted for r in results),
+        "files_reclaimed_while_leased": sum(r.files_deleted for r in pass1),
+        "bytes_reclaimed": sum(r.bytes_reclaimed for r in results),
+        "expected_objects": len(expected_reclaim),
+        "reclaimed_objects": len(deleted),
+        "reclaim_exact": reclaim_exact,
+        "leased_identical": leased_ok,
+        "survivors_identical": survivors_ok,
+    }
+
+
+def run(json_path=None):
+    results = {"bench": "dedup"}
+    lines = []
+
+    store, obj, variants, base, fan = variant_fanout()
+    ch = churn(store, obj, variants, base)
+    results["fanout"] = fan
+    results["churn"] = ch
+    results["gate"] = {
+        "variants_vs_base_ratio": fan["variants_vs_base_ratio"],
+        "naive_vs_dedup": fan["naive_vs_dedup"],
+        "reclaim_exact": ch["reclaim_exact"],
+        "leased_identical": ch["leased_identical"],
+        "survivors_identical": ch["survivors_identical"],
+    }
+
+    lines.append(row(
+        "dedup_variant_fanout", 0.0,
+        f"{VARIANTS} variants add "
+        f"{fan['variants_vs_base_ratio']:.2f}x base physical "
+        f"(naive {fan['naive_vs_dedup']:.2f}x larger) "
+        f"wire {fan['wire_bytes_dedup']}B vs {fan['wire_bytes_naive']}B"))
+    lines.append(row(
+        "dedup_churn_reclaim", 0.0,
+        f"deleted {DELETE_VARIANTS} variants -> "
+        f"{ch['reclaimed_objects']}/{ch['expected_objects']} objects "
+        f"exact={ch['reclaim_exact']} leased_ok={ch['leased_identical']}"))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(json_path="BENCH_dedup.json"):
+        print(line)

@@ -25,7 +25,12 @@ configuration lost a write. Gated metrics:
 * ``BENCH_stream_loader.json`` — width-8 sustained streaming-loader
   throughput vs serial awaited gets (also hard-floored at 2.0x), plus
   the invariants that the per-batch p99 latency is reported non-null and
-  peak prefetch memory stayed within the ``window x batch_bytes`` bound.
+  peak prefetch memory stayed within the ``window x batch_bytes`` bound;
+* ``BENCH_dedup.json`` — naive-vs-CAS physical-byte ratio for the
+  8-variant fine-tune fan-out, plus the invariants that the variants add
+  at most 2.5x the base's physical bytes, that deleting half the
+  variants + vacuum reclaims EXACTLY their unshared objects, and that
+  leased reads stayed byte-identical through the churn.
 
 Improvements never fail the gate; commit a refreshed baseline JSON when a
 PR deliberately moves a metric.
@@ -53,6 +58,8 @@ GATES = [
      lambda d: float(d["gate"]["reduction"])),
     ("BENCH_stream_loader.json", "width-8 loader vs serial-gets throughput",
      lambda d: float(d["gate"]["loader_vs_serial_w8"])),
+    ("BENCH_dedup.json", "naive vs CAS physical bytes (8-variant fan-out)",
+     lambda d: float(d["gate"]["naive_vs_dedup"])),
 ]
 
 # invariants checked on the fresh run only (no baseline comparison)
@@ -60,6 +67,7 @@ MIN_RECLAIMED_FRAC = 0.50
 MIN_COMPRESSION_REDUCTION = 2.0       # vs raw tensor bytes (acceptance)
 MAX_COMPRESSED_READ_OVERHEAD = 1.25   # full-read makespan vs uncompressed
 MIN_LOADER_VS_SERIAL_W8 = 2.0         # streaming loader throughput (acceptance)
+MAX_VARIANTS_VS_BASE = 2.5            # 8 variants' physical bytes vs base
 
 
 def _load(path: str) -> dict:
@@ -152,6 +160,30 @@ def main(argv=None) -> int:
         print(f"[OK] stream loader: {lratio:.2f}x serial at w8, "
               f"batch p99 {float(lgate['batch_p99_s']):.4f}s, "
               f"prefetch memory within bound")
+
+    dedup = _load(os.path.join(args.fresh, "BENCH_dedup.json"))
+    dgate = dedup["gate"]
+    vratio = float(dgate["variants_vs_base_ratio"])
+    if vratio > MAX_VARIANTS_VS_BASE:
+        print(f"[REGRESSION] {dedup['fanout']['variants']} variants cost "
+              f"{vratio:.2f}x base physical bytes > ceiling "
+              f"{MAX_VARIANTS_VS_BASE:.2f}x")
+        failures.append("variant fan-out physical ceiling")
+    if not dgate.get("reclaim_exact"):
+        print(f"[REGRESSION] variant churn reclaim not exact: "
+              f"{dedup['churn']['reclaimed_objects']} reclaimed vs "
+              f"{dedup['churn']['expected_objects']} doomed-only objects")
+        failures.append("dedup reclaim exactness")
+    if not (dgate.get("leased_identical") and dgate.get("survivors_identical")):
+        print("[REGRESSION] reads diverged during variant churn "
+              f"(leased={dgate.get('leased_identical')} "
+              f"survivors={dgate.get('survivors_identical')})")
+        failures.append("dedup churn read identity")
+    if vratio <= MAX_VARIANTS_VS_BASE and dgate.get("reclaim_exact") and \
+            dgate.get("leased_identical") and dgate.get("survivors_identical"):
+        print(f"[OK] dedup: variants at {vratio:.2f}x base physical "
+              f"(naive {float(dgate['naive_vs_dedup']):.2f}x larger), "
+              f"churn reclaim exact, leased reads identical")
 
     if failures:
         print(f"FAIL: {len(failures)} gate(s) regressed: "

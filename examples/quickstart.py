@@ -62,7 +62,8 @@ def main():
     # --- ACID + time travel -------------------------------------------------
     v = store.version()
     old = store.open("images")                         # pinned at v
-    store.put(dense * 2, tensor_id="images", overwrite=True)
+    store.put(dense * 2, tensor_id="images", overwrite=True,
+              target_file_bytes=64 << 10)   # same chunk-file grid as v1
     np.testing.assert_array_equal(store.open("images").read(), dense * 2)
     np.testing.assert_array_equal(old.read(), dense)   # ref still sees v
     np.testing.assert_array_equal(store.open("images", version=v).read(), dense)
@@ -70,11 +71,25 @@ def main():
     print("tensors in store:", [t for t, _ in store.list_tensors()])
     print("catalog metadata work:", store.catalog_stats)
 
-    # --- space accounting: logical vs physical bytes, per codec -----------
+    # --- model variants: dedup + delta-encode against a base tensor -------
+    # a "fine-tune" that only nudges a slab of the weights: unchanged
+    # chunks commit as references to the base's objects (no upload) and
+    # changed chunks store as XOR deltas -- reads stay transparent
+    variant = (dense * 2).copy()        # current contents of "images"
+    variant[:8] *= 1.01                 # ...with 1/8 of the rows nudged
+    store.put_variant(variant, base_tid="images", tensor_id="images-ft",
+                      target_file_bytes=64 << 10)
+    np.testing.assert_array_equal(store.open("images-ft").read(), variant)
+
+    # --- space accounting: logical vs physical bytes, dedup, per codec ----
     st = store.storage_stats()
-    print(f"storage: {st['physical_bytes']/1e3:.1f} kB physical / "
+    print(f"\nstorage: {st['physical_bytes']/1e3:.1f} kB physical / "
           f"{st['logical_bytes']/1e3:.1f} kB logical "
           f"({st['ratio']:.2f}x, default codec {st['compression']!r})")
+    d = st["dedup"]
+    print(f"dedup: {d['deduped_refs']} of {d['references']} chunk refs "
+          f"reused an object ({d['saved_bytes']/1e3:.1f} kB saved), "
+          f"{d['delta_files']} variant chunks stored as deltas")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,7 @@ WriteBatch), and device-side (jit) encodings for in-training use.
 from .encodings.base import Codec, SparseCOO, get_codec, normalize_slices
 from .encodings import ftsf, coo, csr, csf, bsgs  # noqa: F401 (register codecs)
 from .sparsity import SPARSE_THRESHOLD, choose_layout, density
+from .cas import ChunkEntry, ChunkIndex, chunk_hash, chunk_index_for
 from .catalog import (Catalog, ShardSource, TensorEntry, TensorRef,
                       build_catalog_index)
 from .batch import BatchClosedError, WriteBatch
@@ -19,4 +20,5 @@ __all__ = ["Codec", "SparseCOO", "get_codec", "normalize_slices",
            "Catalog", "TensorEntry", "TensorRef", "WriteBatch",
            "BatchClosedError", "ShardRouter", "VersionVector",
            "load_manifest", "Lease", "LeaseRegistry", "RetentionPolicy",
-           "registry_for", "ShardSource", "build_catalog_index"]
+           "registry_for", "ShardSource", "build_catalog_index",
+           "ChunkEntry", "ChunkIndex", "chunk_hash", "chunk_index_for"]

@@ -32,6 +32,7 @@ immediately (retrying cannot make two overwrites of one tensor commute).
 
 from __future__ import annotations
 
+import uuid
 from typing import Any, Dict, List, Optional, Tuple, Union, TYPE_CHECKING
 
 from ..lake.log import CommitConflict, Snapshot
@@ -148,6 +149,39 @@ class WriteBatch:
             guard=self._guard(self._store.router.shard_of(tid)),
             compression=compression,
             **codec_params)
+        self._ops.append({"kind": "put", "shard": shard, "tid": tid,
+                          "adds": adds, "removes": sorted(existing)})
+        if header_seed is not None:
+            self._header_seeds.append(header_seed)
+        self._staged_tids.append(tid)
+        return tid
+
+    def put_variant(self, tensor: Any, *, base_tid: str,
+                    tensor_id: Optional[str] = None, overwrite: bool = False,
+                    target_file_bytes: Optional[int] = None,
+                    compression: Optional[str] = None) -> str:
+        """Stage ``tensor`` as a delta-encoded variant of ``base_tid``.
+
+        Chunks identical to the base dedup into pure references via the
+        chunk index; differing chunks upload as XOR deltas against the
+        base's objects. The staged tensor is an ordinary tensor in every
+        other way (same commit/rebase semantics as :meth:`put`). The
+        default id is ``"<base_tid>~<hex>"``; pass ``tensor_id`` to
+        choose one. Raises ``KeyError`` if ``base_tid`` does not exist.
+        """
+        self._check_open()
+        tid = tensor_id if tensor_id is not None else \
+            f"{base_tid}~{uuid.uuid4().hex[:8]}"
+        if tid in self._staged_tids:
+            raise ValueError(f"tensor {tid!r} staged twice in one batch")
+        existing = self._existing_paths(tid)
+        if existing and not overwrite:
+            raise ValueError(
+                f"tensor {tid!r} already exists (use overwrite=True)")
+        shard, adds, header_seed = self._store._encode_and_upload_variant(
+            tensor, base_tid=base_tid, tensor_id=tid,
+            target_file_bytes=target_file_bytes, compression=compression,
+            guard_for=self._guard)
         self._ops.append({"kind": "put", "shard": shard, "tid": tid,
                           "adds": adds, "removes": sorted(existing)})
         if header_seed is not None:

@@ -49,8 +49,9 @@ from typing import (TYPE_CHECKING, Any, Dict, Iterator, List, Optional,
 import numpy as np
 
 from ..lake import columnar
+from ..lake.io import content_cache_key
 from ..lake.log import Snapshot
-from ..lake.table import Filters, file_overlaps, filter_rows
+from ..lake.table import Filters, file_overlaps, filter_rows, physical_path
 from .encodings.base import (SparseCOO, get_codec, header_dtype,
                              header_shape, normalize_slices)
 
@@ -249,6 +250,16 @@ class Catalog:
         is fetched and decoded exactly once per plan. This is the paper's
         read-slice pruning lifted from one tensor to a whole batch /
         param-tree load.
+
+        Keys resolve through :func:`~repro.lake.table.physical_path`, so
+        deduplicated add-actions (several logical files aliasing one
+        content-addressed object) merge into a single fetch, and the
+        block-cache names carry each object's content hash. Delta-stored
+        files additionally contribute their **base object keys** to the
+        plan: bases are prepended to ``unique_keys`` so they land in the
+        block cache before any delta frame that reconstructs against
+        them — the executor's inline base fetch then hits cache instead
+        of issuing a nested get per delta file.
         """
         # headers drive spec normalization and every decode; warm the
         # uncached ones concurrently rather than one RTT at a time. The
@@ -274,6 +285,8 @@ class Catalog:
                 for _ in io.fetch_ordered(self.table_for(0).store, keys):
                     pass
         reqs: List[PlanRequest] = []
+        names: Dict[str, Optional[str]] = {}      # key -> block-cache name
+        base_keys: Dict[str, Optional[str]] = {}  # delta base key -> name
         for tid, slices in requests:
             entry = self.entry(tid)
             codec = get_codec(entry.layout)
@@ -289,7 +302,20 @@ class Catalog:
                 filters = codec.slice_filters(header, spec) or None
                 adds = [a for a in adds if file_overlaps(a, filters)]
             table = self.table_for(entry.shard)
-            keys = [f"{table.path}/{a['path']}" for a in adds]
+            keys: List[str] = []
+            for a in adds:
+                k = f"{table.path}/{physical_path(a)}"
+                if k not in names:
+                    keys.append(k)
+                    ch = a.get("contentHash")
+                    names[k] = content_cache_key(ch) if ch else None
+                elif k not in keys:
+                    keys.append(k)  # cross-request alias, new to this request
+                db = a.get("deltaBase")
+                if db:
+                    bh = a.get("deltaBaseHash")
+                    base_keys.setdefault(
+                        db, content_cache_key(bh) if bh else None)
             reqs.append(PlanRequest(tid=tid, codec=codec, spec=spec,
                                     filters=filters, keys=keys))
         seen: Dict[str, None] = {}
@@ -298,8 +324,15 @@ class Catalog:
             total += len(r.keys)
             for k in r.keys:
                 seen[k] = None
-        return FetchPlan(requests=reqs, unique_keys=list(seen),
-                         keys_deduped=total - len(seen))
+        deduped = total - len(seen)
+        # bases FIRST: by the time a delta frame decodes, its base bytes
+        # are already block-cached (windowed fetch_ordered preserves order)
+        merged: Dict[str, None] = dict.fromkeys(base_keys)
+        merged.update(seen)
+        unique = list(merged)
+        cache_names = [names.get(k) or base_keys.get(k) for k in unique]
+        return FetchPlan(requests=reqs, unique_keys=unique,
+                         keys_deduped=deduped, cache_names=cache_names)
 
     def read_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]],
                   *, window: Optional[int] = None) -> List[np.ndarray]:
@@ -346,10 +379,14 @@ class Catalog:
                 if not r.keys:
                     finish(i)  # fully pruned (or chunkless) request
             store = self.table_for(0).store
-            fetched = io.fetch_ordered(store, plan.unique_keys, window=window)
+            fetched = io.fetch_ordered(store, plan.unique_keys, window=window,
+                                       cache_names=plan.cache_names or None)
             for key, data in zip(plan.unique_keys, fetched):
+                waiters = waiting.get(key, ())
+                if not waiters:
+                    continue  # base-object prefetch: block-cached for deltas
                 batch = columnar.read_table(data)
-                for i in waiting[key]:
+                for i in waiters:
                     r = plan.requests[i]
                     received[i][key] = filter_rows(batch, r.filters)
                     if len(received[i]) == len(r.keys):
@@ -380,8 +417,11 @@ class FetchPlan:
     """A merged cross-tensor fetch plan (see :meth:`Catalog.plan_many`)."""
 
     requests: List[PlanRequest]
-    unique_keys: List[str]                    # deduped, first-occurrence order
+    unique_keys: List[str]                    # bases first, then deduped keys
     keys_deduped: int                         # references merged away
+    # per-key block-cache names (content-hash based where known), aligned
+    # with unique_keys; empty on plans built before the CAS subsystem
+    cache_names: List[Optional[str]] = field(default_factory=list)
 
     @property
     def n_fetches(self) -> int:

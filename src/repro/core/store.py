@@ -43,14 +43,16 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..lake import DeltaTable, ObjectStore, ReadExecutor, columnar
-from ..lake.compression import (CompressionSpec, UnknownCodecError,
+from ..lake.compression import (CompressionSpec, DeltaBase, UnknownCodecError,
                                 parse_compression)
-from ..lake.io import get_default_executor
+from ..lake.io import content_cache_key, get_default_executor
 from ..lake.log import ObjectNotFoundError, catalog_index_key
-from ..lake.table import CompactResult, VacuumResult
+from ..lake.table import (CompactResult, VacuumResult, chunk_hash,
+                          physical_path)
 from .batch import WriteBatch
+from .cas import ChunkIndex, chunk_index_for
 from .catalog import Catalog, ShardSource, TensorRef, build_catalog_index
-from .encodings.base import SparseCOO, get_codec
+from .encodings.base import SparseCOO, first_scalar, get_codec
 from .leases import Lease, RetentionPolicy, lease_scope, registry_for
 from .sharding import (ROUTER_ALGO, ShardRouter, load_or_init_manifest,
                        resolve_version_vector, shard_table_path)
@@ -93,6 +95,20 @@ def _slice_columns(columns: Dict[str, Any], lo: int, hi: int) -> Dict[str, Any]:
     return out
 
 
+def _select_rows(columns: Dict[str, Any],
+                 idx: Sequence[int]) -> Dict[str, Any]:
+    """Row selection by (possibly reordered) index list — the variant
+    path uses it to mirror a base file's chunk order exactly."""
+    idx = list(idx)
+    out: Dict[str, Any] = {}
+    for k, v in columns.items():
+        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
+            out[k] = v[np.asarray(idx, dtype=np.int64)] if idx else v[:0]
+        else:
+            out[k] = [v[i] for i in idx]
+    return out
+
+
 VersionArg = Union[None, int, Sequence[int]]
 
 
@@ -104,6 +120,14 @@ class DeltaTensorStore:
     see :mod:`repro.lake.compression`) — recorded in the store manifest at
     create time so every later client agrees, overridable per ``put``.
     ``None`` defers to the manifest (raw bytes when it records nothing).
+
+    ``dedup=True`` (the default) attaches a content-addressed chunk index
+    (:mod:`repro.core.cas`) to every shard table: an upload whose decoded
+    bytes hash to an already-stored chunk commits a reference to the
+    existing object instead of re-uploading, and :meth:`put_variant`
+    stores fine-tuned variants as XOR deltas against their base tensor.
+    Deletes stay safe either way — vacuum reference-counts physical
+    objects across every retained/leased snapshot.
     """
 
     def __init__(self, object_store: ObjectStore, root: str = "tensor_store",
@@ -111,7 +135,8 @@ class DeltaTensorStore:
                  shards: Optional[int] = None,
                  retention: Optional[RetentionPolicy] = None,
                  spill_threshold: Optional[int] = DEFAULT_SPILL_THRESHOLD,
-                 compression: Union[None, str, CompressionSpec] = None):
+                 compression: Union[None, str, CompressionSpec] = None,
+                 dedup: bool = True):
         root = root.rstrip("/")
         self.root = root
         spec = parse_compression(compression)
@@ -160,6 +185,13 @@ class DeltaTensorStore:
                 DeltaTable.create(object_store, shard_table_path(root, i),
                                   io=io)
                 for i in range(self.shards)]
+        self.dedup = bool(dedup)
+        if self.dedup:
+            # one shared index per physical table (registry-keyed like the
+            # lease registry): every client of this table in the process
+            # dedups against the same map, loaded lazily from _cas/
+            for t in self.tables:
+                t.cas = chunk_index_for(t)
         # per-version-vector catalogs: snapshots are immutable, so a catalog
         # never goes stale; LRU-capped for long-lived many-version clients
         self._catalogs: "OrderedDict[Tuple[int, ...], Catalog]" = OrderedDict()
@@ -323,6 +355,11 @@ class DeltaTensorStore:
         # plain put: content is deterministic per version, so a racing
         # re-spill writes identical bytes — last writer wins harmlessly
         table.store.put(catalog_index_key(table.path, snap.version), body)
+        # the chunk index spills alongside the catalog indexes, so a fresh
+        # process dedups against everything this one stored
+        idx = getattr(table, "cas", None)
+        if idx is not None:
+            idx.spill(table)
 
     def spill_catalog(self, version: VersionArg = None) -> List[str]:
         """Force-write the per-shard catalog index at ``version`` (latest
@@ -403,18 +440,54 @@ class DeltaTensorStore:
         the horizon keep working. Deleted paths are evicted from the block
         and header caches, and catalogs cached for now-unreachable versions
         are dropped. ``dry_run`` reports without deleting.
+
+        With dedup, deletes are effectively **reference-counted**: each
+        shard table keeps an object while any retained/leased add-action
+        references it by path, ``physPath`` alias, or ``deltaBase``.
+        Sharded stores additionally pre-scan every shard's retained
+        snapshots for *cross-shard* delta-base references (a variant's
+        files may delta against a base tensor routed to another shard)
+        and pass them to the owning shard as extra live paths. After
+        deleting, each shard's chunk index drops the reclaimed paths (so
+        dedup never hands out dangling references), the matching
+        content-cache entries are evicted, and the index respills.
         """
         keep = self.retention.keep_versions if keep_versions is None \
             else max(1, int(keep_versions))
         ttl = self.retention.ttl_s if ttl_s is None else ttl_s
 
-        def one(shard: int) -> VacuumResult:
+        plans = []
+        for shard in range(self.shards):
             table = self.tables[shard]
             latest = table.version()
             horizon = self._retention_horizon(shard, latest, keep, ttl)
-            leased = self.leases.leased_versions(shard)
+            leased = sorted(self.leases.leased_versions(shard))
+            plans.append((table, horizon, leased))
+
+        extra_live: Dict[int, set] = {i: set() for i in range(self.shards)}
+        if self.shards > 1:
+            # cross-shard delta-base closure: deltaBase keys are absolute,
+            # so prefix-match them to the owning shard table (the trailing
+            # "/" keeps shard-1 from matching shard-10)
+            prefixes = [(t.path + "/", i) for i, t in enumerate(self.tables)]
+            for shard, (table, horizon, leased) in enumerate(plans):
+                retained = table.retained_versions(horizon=horizon,
+                                                   extra_versions=leased)
+                for v in sorted(retained):
+                    for a in table.log.snapshot(v).files.values():
+                        db = a.get("deltaBase")
+                        if not db:
+                            continue
+                        for pfx, owner in prefixes:
+                            if owner != shard and db.startswith(pfx):
+                                extra_live[owner].add(db[len(pfx):])
+                                break
+
+        def one(shard: int) -> VacuumResult:
+            table, horizon, leased = plans[shard]
             return table.vacuum(horizon=horizon,
-                                extra_versions=sorted(leased),
+                                extra_versions=leased,
+                                extra_live=sorted(extra_live[shard]),
                                 dry_run=dry_run)
 
         if self.shards == 1:
@@ -423,6 +496,7 @@ class DeltaTensorStore:
             results = self.io.map(one, list(range(self.shards)))
         if not dry_run:
             for shard, res in enumerate(results):
+                table = self.tables[shard]
                 self._evict_headers(res.deleted_paths)
                 # catalogs pinned outside this shard's retained set now
                 # reference deleted files — drop them from the cache
@@ -431,6 +505,18 @@ class DeltaTensorStore:
                 for key in [k for k in self._catalogs
                             if k[shard] not in retained]:
                     self._catalogs.pop(key, None)
+                idx = getattr(table, "cas", None)
+                if idx is None:
+                    continue
+                if res.deleted_paths:
+                    idx.ensure_loaded(table)
+                    dropped = idx.drop_paths(res.deleted_paths)
+                    if dropped:
+                        self.io.invalidate(
+                            table.store,
+                            [content_cache_key(h) for h in dropped])
+                if idx.dirty:
+                    idx.spill(table)
         return results
 
     # -- write -------------------------------------------------------------
@@ -474,7 +560,13 @@ class DeltaTensorStore:
 
         ``compression`` overrides the store default for this tensor's
         chunk files; headers always land raw (tiny, latency-critical, and
-        a codec-less client must still be able to stat shapes)."""
+        a codec-less client must still be able to stat shapes).
+
+        When the store dedups, every non-header file is offered to the
+        shard table's chunk index: content already stored commits as a
+        reference, moving zero bytes (checkpoint re-uploads of unchanged
+        tensors collapse this way). One ``dedup_seen`` set spans the whole
+        tensor so its own files never alias each other."""
         codec = get_codec(layout)
         tid = tensor_id
         shard = self.router.shard_of(tid)
@@ -488,21 +580,159 @@ class DeltaTensorStore:
                                          if v is not None})
         adds: List[Dict[str, Any]] = []
         header_seed = None
+        dedup_seen: set = set()
         for grp in groups:
-            rows = len(next(iter(grp.columns.values())))
-            per_file = max(1, int(target //
-                                  max(_approx_row_bytes(grp.columns, rows), 1)))
             grp_spec = spec if grp.kind != "header" else None
-            for lo in range(0, rows, per_file):
-                cols = _slice_columns(grp.columns, lo, min(rows, lo + per_file))
-                adds.append(table.append(
-                    cols, commit=False, guard=guard,
-                    compression=grp_spec, shuffle_itemsize=itemsize,
-                    partition_values={"tensor": tid, "kind": grp.kind,
-                                      "layout": layout}))
+            cas = table.cas if grp.kind != "header" else None
+            adds.extend(self._append_rows(
+                table, grp.columns, tid=tid, kind=grp.kind, layout=layout,
+                spec=grp_spec, itemsize=itemsize, target=target, guard=guard,
+                cas=cas, dedup_seen=dedup_seen))
             if grp.kind == "header":
                 header_seed = (adds[-1]["path"], grp.columns)
         return shard, adds, header_seed
+
+    def _append_rows(self, table: DeltaTable, columns: Dict[str, Any], *,
+                     tid: str, kind: str, layout: str, spec, itemsize: int,
+                     target: int, guard=None, cas: Optional[ChunkIndex] = None,
+                     dedup_seen: Optional[set] = None) -> List[Dict[str, Any]]:
+        """Split ``columns`` into ~``target``-byte part files and upload
+        them (no commit) under the tensor's partition values."""
+        rows = len(next(iter(columns.values())))
+        per_file = max(1, int(target //
+                              max(_approx_row_bytes(columns, rows), 1)))
+        adds: List[Dict[str, Any]] = []
+        for lo in range(0, rows, per_file):
+            cols = _slice_columns(columns, lo, min(rows, lo + per_file))
+            adds.append(table.append(
+                cols, commit=False, guard=guard,
+                compression=spec, shuffle_itemsize=itemsize,
+                cas=cas, dedup_seen=dedup_seen,
+                partition_values={"tensor": tid, "kind": kind,
+                                  "layout": layout}))
+        return adds
+
+    def _encode_and_upload_variant(self, tensor: Any, *, base_tid: str,
+                                   tensor_id: str, guard_for,
+                                   target_file_bytes: Optional[int] = None,
+                                   compression: Union[None, str,
+                                                      CompressionSpec] = None):
+        """Encode ``tensor`` as a delta-stored variant of ``base_tid``.
+
+        The variant's chunk rows are re-partitioned to mirror the base
+        tensor's chunk files (aligned row-by-row on ``chunk_index``), so
+        each variant file XOR-diffs against exactly one existing base
+        object — a fine-tune that perturbs a few percent of values
+        compresses to near-nothing, and chunks identical to the base
+        dedup into pure references before any delta is even encoded.
+        Rows no base file covers (grown tensors, layouts without a
+        ``chunk_index`` column) fall back to the plain upload path, as
+        does the header. Delta-stored files never target another delta
+        (vacuum's liveness closure stays single-hop by construction:
+        only base adds without ``deltaBase`` are eligible anchors).
+
+        ``guard_for(shard)`` supplies the upload guard per shard — the
+        base tensor may route to a different shard than the variant, and
+        its referenced objects must stay pinned through the commit
+        window. Returns ``(shard, adds, header_seed)`` like
+        :meth:`_encode_and_upload`.
+        """
+        cat = self.catalog()
+        entry = cat.entry(base_tid)
+        layout = entry.layout
+        codec = get_codec(layout)
+        tid = tensor_id
+        shard = self.router.shard_of(tid)
+        table = self.tables[shard]
+        base_table = self.tables[entry.shard]
+        target = TARGET_FILE_BYTES if target_file_bytes is None \
+            else target_file_bytes
+        spec = parse_compression(compression)
+        if spec is None:
+            spec = self.compression
+        if spec is None or not spec.active:
+            spec = parse_compression("zlib")  # deltas need a codec to win
+        itemsize = self._tensor_itemsize(tensor)
+        params: Dict[str, Any] = {}
+        try:
+            header = cat.header(base_tid)
+        except (KeyError, ObjectNotFoundError):
+            header = None
+        if header is not None and "chunk_dim_count" in header:
+            # chunk the variant exactly like its base, or rows won't align
+            params["chunk_dims"] = int(first_scalar(header["chunk_dim_count"]))
+        guard = guard_for(shard)
+        base_guard = guard_for(entry.shard) if entry.shard != shard else guard
+        lease = self.leases.acquire(cat.version_vector)
+        try:
+            groups = codec.encode(tensor, **params)
+            dedup_seen: set = set()
+            adds: List[Dict[str, Any]] = []
+            header_seed = None
+            eligible = [a for a in entry.chunk_adds if not a.get("deltaBase")]
+            base_keys = [f"{base_table.path}/{physical_path(a)}"
+                         for a in eligible]
+            base_names = [content_cache_key(a["contentHash"])
+                          if a.get("contentHash") else None for a in eligible]
+            base_blobs = list(self.io.fetch_ordered(
+                base_table.store, base_keys,
+                cache_names=base_names)) if eligible else []
+            for grp in groups:
+                if grp.kind == "header":
+                    add = table.append(
+                        grp.columns, commit=False, guard=guard,
+                        partition_values={"tensor": tid, "kind": "header",
+                                          "layout": layout})
+                    adds.append(add)
+                    header_seed = (add["path"], grp.columns)
+                    continue
+                cols = grp.columns
+                rows = len(next(iter(cols.values())))
+                covered = np.zeros(rows, dtype=bool)
+                order_col = cols.get("chunk_index")
+                if order_col is not None and len(base_blobs):
+                    index_of = {int(ci): i
+                                for i, ci in enumerate(order_col)}
+                    for base_add, base_key, blob in zip(eligible, base_keys,
+                                                        base_blobs):
+                        base_order = columnar.read_table(
+                            blob, ["chunk_index"]).get("chunk_index")
+                        if base_order is None or len(base_order) == 0:
+                            continue
+                        sel = [index_of.get(int(ci)) for ci in base_order]
+                        if any(i is None or covered[i] for i in sel):
+                            # this base file covers rows the variant lacks
+                            # (or rows already taken): no clean 1:1 diff
+                            continue
+                        aligned = _select_rows(cols, sel)
+                        bh = base_add.get("contentHash") or chunk_hash(blob)
+                        add = table.append(
+                            aligned, commit=False, guard=guard,
+                            compression=spec, shuffle_itemsize=itemsize,
+                            cas=table.cas, dedup_seen=dedup_seen,
+                            delta_base=DeltaBase(key=base_key, data=blob,
+                                                 content_hash=bh),
+                            partition_values={"tensor": tid,
+                                              "kind": grp.kind,
+                                              "layout": layout})
+                        if add.get("deltaBase") == base_key:
+                            # the commit will reference the base object:
+                            # pin it through the commit window even if the
+                            # base tensor is concurrently deleted+vacuumed
+                            base_guard.add(physical_path(base_add))
+                        adds.append(add)
+                        covered[np.asarray(sel, dtype=np.int64)] = True
+                if not covered.all():
+                    leftover = cols if not covered.any() else \
+                        _select_rows(cols, np.flatnonzero(~covered))
+                    adds.extend(self._append_rows(
+                        table, leftover, tid=tid, kind=grp.kind,
+                        layout=layout, spec=spec, itemsize=itemsize,
+                        target=target, guard=guard, cas=table.cas,
+                        dedup_seen=dedup_seen))
+            return shard, adds, header_seed
+        finally:
+            lease.release()
 
     def put_deferred(self, tensor: Any, *, layout: str = "auto",
                      tensor_id: Optional[str] = None,
@@ -553,6 +783,30 @@ class DeltaTensorStore:
             tid = b.put(tensor, layout=layout, tensor_id=tensor_id,
                         overwrite=overwrite, target_file_bytes=target_file_bytes,
                         compression=compression, **codec_params)
+        return tid
+
+    def put_variant(self, tensor: Any, *, base_tid: str,
+                    tensor_id: Optional[str] = None,
+                    overwrite: bool = False,
+                    target_file_bytes: int = TARGET_FILE_BYTES,
+                    compression: Union[None, str, CompressionSpec] = None,
+                    ) -> str:
+        """Store ``tensor`` as a delta-encoded variant of ``base_tid``.
+
+        The fine-tuned-model write path: chunks identical to the base
+        dedup into pure references, differing chunks store as XOR deltas
+        against the base's objects (reconstructed transparently on read).
+        The variant is an ordinary tensor afterwards — same handles, same
+        reads, same deletes; vacuum keeps the base objects alive while
+        any retained variant references them. Returns the variant's id
+        (default ``"<base_tid>~<hex>"``). Sugar for a one-put
+        :meth:`batch` using :meth:`WriteBatch.put_variant`.
+        """
+        with self.batch(op="PUT VARIANT") as b:
+            tid = b.put_variant(tensor, base_tid=base_tid,
+                                tensor_id=tensor_id, overwrite=overwrite,
+                                target_file_bytes=target_file_bytes,
+                                compression=compression)
         return tid
 
     def delete(self, tid: str) -> None:
@@ -611,19 +865,25 @@ class DeltaTensorStore:
             return ref.nbytes
 
     def storage_stats(self, version: VersionArg = None) -> Dict[str, Any]:
-        """Logical vs physical bytes of the store at ``version`` — the
-        paper's space-efficiency claim, measurable.
+        """Logical vs physical vs *deduplicated* bytes at ``version`` —
+        the paper's space-efficiency claim, measurable.
 
         Walks the (cached) catalog's add-actions, so it costs no data
-        fetches. Returns::
+        fetches. Physical bytes count each stored object **once**, however
+        many add-actions reference it — the honest answer dedup demands.
+        Returns::
 
             {"tensors": int, "files": int,
-             "physical_bytes": int,   # stored (possibly compressed)
+             "physical_bytes": int,   # unique stored objects, stored size
+             "referenced_bytes": int, # sum over references (pre-dedup view)
              "logical_bytes": int,    # pre-compression file bytes
              "ratio": float,          # logical / physical  (>= 1.0 good)
              "compression": str,      # the store's default codec spec
              "by_codec": {codec_id: {"files", "physical_bytes",
-                                     "logical_bytes", "ratio"}}}
+                                     "logical_bytes", "ratio"}},
+             "dedup": {"unique_chunks", "references", "deduped_refs",
+                       "saved_bytes",   # referenced - physical
+                       "delta_files"}}  # files stored as XOR deltas
 
         Files written before compression existed count under codec
         ``"none"`` with ratio 1.0 — so a half-migrated store shows exactly
@@ -632,31 +892,91 @@ class DeltaTensorStore:
         """
         cat = self.catalog(version)
         by_codec: Dict[str, Dict[str, Any]] = {}
-        files = physical = logical = 0
+        seen_objects: set = set()
+        files = physical = referenced = logical = 0
+        deduped_refs = delta_files = 0
         for tid in cat:
             entry = cat.entry(tid)
             for add in entry.header_adds + entry.chunk_adds:
                 codec = add.get("codec", "none")
                 phys = int(add.get("size", 0))
                 logi = int(add.get("rawSize", phys))
+                obj = (entry.shard, physical_path(add))
+                unique = obj not in seen_objects
+                seen_objects.add(obj)
                 rec = by_codec.setdefault(
                     codec, {"files": 0, "physical_bytes": 0,
                             "logical_bytes": 0})
                 rec["files"] += 1
-                rec["physical_bytes"] += phys
                 rec["logical_bytes"] += logi
                 files += 1
-                physical += phys
+                referenced += phys
                 logical += logi
+                if unique:
+                    rec["physical_bytes"] += phys
+                    physical += phys
+                else:
+                    deduped_refs += 1
+                if add.get("deltaBase") and unique:
+                    delta_files += 1
         for rec in by_codec.values():
             rec["ratio"] = (rec["logical_bytes"] / rec["physical_bytes"]
                             if rec["physical_bytes"] else 1.0)
         return {"tensors": len(cat), "files": files,
-                "physical_bytes": physical, "logical_bytes": logical,
+                "physical_bytes": physical,
+                "referenced_bytes": referenced,
+                "logical_bytes": logical,
                 "ratio": logical / physical if physical else 1.0,
                 "compression": self.compression.id if self.compression
                 else "none",
-                "by_codec": by_codec}
+                "by_codec": by_codec,
+                "dedup": {"unique_chunks": len(seen_objects),
+                          "references": files,
+                          "deduped_refs": deduped_refs,
+                          "saved_bytes": referenced - physical,
+                          "delta_files": delta_files}}
+
+    def dedup_stats(self) -> Dict[str, Any]:
+        """Chunk-index counters aggregated across shards::
+
+            {"enabled": bool, "entries": int,
+             "hits", "misses", "inserts", "collisions",
+             "verified", "verify_failures"}
+
+        ``hits`` are uploads that became pure references (zero bytes
+        moved); ``collisions`` are hash matches rejected on raw-size
+        mismatch (the paranoia check firing).
+        """
+        out: Dict[str, Any] = {"enabled": self.dedup, "entries": 0,
+                               "hits": 0, "misses": 0, "inserts": 0,
+                               "collisions": 0, "verified": 0,
+                               "verify_failures": 0}
+        for t in self.tables:
+            idx = getattr(t, "cas", None)
+            if idx is None:
+                continue
+            out["entries"] += len(idx)
+            for k, v in idx.stats.items():
+                out[k] += v
+        return out
+
+    def build_chunk_index(self) -> List[int]:
+        """Backfill every shard's chunk index from its live snapshot.
+
+        The migration path for stores written before dedup existed
+        (``repro.launch.gc --build-chunk-index``): adds without a
+        recorded ``contentHash`` are fetched and hashed, the index is
+        spilled, and — when the store dedups — future uploads reuse the
+        backfilled chunks. Idempotent. Returns per-shard counts of new
+        entries.
+        """
+        counts: List[int] = []
+        for table in self.tables:
+            idx = getattr(table, "cas", None) or chunk_index_for(table)
+            n = idx.build_from_snapshot(table, table.snapshot())
+            idx.spill(table)
+            counts.append(n)
+        return counts
 
     def io_stats(self) -> Dict[str, Any]:
         """Read-path counters + per-request latency percentiles — the
@@ -680,6 +1000,7 @@ class DeltaTensorStore:
                 "plans": s.plans, "plan_requests": s.plan_requests,
                 "plan_keys_fetched": s.plan_keys_fetched,
                 "plan_keys_deduped": s.plan_keys_deduped,
+                "deltas_reconstructed": s.deltas_reconstructed,
                 "latency": s.latency.summary()}
 
     def version(self) -> Union[int, Tuple[int, ...]]:

@@ -39,10 +39,24 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
-from .compression import decode_frame, is_framed
+from .compression import decode_frame, frame_info
 
 DEFAULT_MAX_WORKERS = 8
 DEFAULT_CACHE_BYTES = 64 << 20
+
+# delta frames may chain (defensively bounded; writers only ever target
+# non-delta bases, so a well-formed store needs depth 1)
+MAX_DELTA_DEPTH = 4
+
+
+def content_cache_key(content_hash: str) -> str:
+    """Block-cache name for content-addressed bytes.
+
+    Two add-actions aliasing the same stored object (dedup) or a delta
+    frame reconstructing against a base share one cache entry when their
+    fetches are named by content hash instead of object key.
+    """
+    return "cas:" + content_hash
 
 # monotonically increasing token per object-store instance: cache keys must
 # survive id() reuse after GC, so the token rides on the store object itself
@@ -194,6 +208,8 @@ class ReadStats:
     frames_decoded: int = 0
     frame_bytes_wire: int = 0
     frame_bytes_decoded: int = 0
+    # variant delta frames reconstructed against their base object
+    deltas_reconstructed: int = 0
     # read_many fetch scheduling: merged plans built, requests they
     # covered, unique keys actually fetched, and references that were
     # deduplicated away (a shared chunk key counted once per extra
@@ -221,6 +237,7 @@ class ReadStats:
             self.hedges_launched = self.hedges_won = 0
             self.frames_decoded = 0
             self.frame_bytes_wire = self.frame_bytes_decoded = 0
+            self.deltas_reconstructed = 0
             self.plans = self.plan_requests = 0
             self.plan_keys_fetched = self.plan_keys_deduped = 0
         self.latency.reset()
@@ -328,26 +345,69 @@ class ReadExecutor:
                            hedge_after_s=self.hedge_after_s,
                            attempts=self.hedge_attempts)
 
-    def _fetch_miss(self, store: Any, key: str,
-                    cache_key: Optional[Tuple[int, str]]) -> bytes:
-        data = self._get_raw(store, key)
+    def _decode_wire(self, store: Any, data: bytes, depth: int = 0) -> bytes:
         # unframe compressed part files here, off the wire: the cache (and
         # every consumer above) sees decoded bytes, while the store charged
-        # bandwidth for the compressed size it actually moved
-        if is_framed(data):
-            wire = len(data)
-            data = decode_frame(data)
-            self.stats.bump(frames_decoded=1, frame_bytes_wire=wire,
-                            frame_bytes_decoded=len(data))
+        # bandwidth for the compressed size it actually moved. Delta frames
+        # additionally reconstruct against their base object (fetched
+        # inline on this thread — never re-submitted to the I/O pool, so a
+        # saturated pool cannot deadlock on its own dependencies).
+        info = frame_info(data)
+        if info is None:
+            return data
+        if info.get("delta_base") is not None:
+            if depth >= MAX_DELTA_DEPTH:
+                raise ValueError(
+                    f"delta base chain deeper than {MAX_DELTA_DEPTH}")
+            self.stats.bump(deltas_reconstructed=1)
+        wire = len(data)
+        data = decode_frame(
+            data,
+            base_fetch=lambda bk, bh: self._base_bytes(store, bk, bh,
+                                                       depth + 1))
+        self.stats.bump(frames_decoded=1, frame_bytes_wire=wire,
+                        frame_bytes_decoded=len(data))
+        return data
+
+    def _base_bytes(self, store: Any, key: str,
+                    content_hash: Optional[str] = None,
+                    depth: int = 1) -> bytes:
+        # decoded bytes of a delta frame's base: content-hash-named cache
+        # lookup first (shared with dedup'd reads of the base itself),
+        # then a plain inline get + decode
+        ck: Optional[Tuple[int, str]] = None
+        if self.cache.capacity:
+            name = content_cache_key(content_hash) if content_hash else key
+            ck = (_store_token(store), name)
+            hit = self.cache.get(ck)
+            if hit is not None:
+                self.stats.bump(cache_hits=1)
+                return hit
+            self.stats.bump(cache_misses=1)
+        data = self._decode_wire(store, self._get_raw(store, key), depth)
+        if ck is not None:
+            self.cache.put(ck, data)
+        return data
+
+    def _fetch_miss(self, store: Any, key: str,
+                    cache_key: Optional[Tuple[int, str]]) -> bytes:
+        data = self._decode_wire(store, self._get_raw(store, key))
         if cache_key is not None:
             self.cache.put(cache_key, data)
         return data
 
     # -- public fetch API ----------------------------------------------------
 
-    def fetch(self, store: Any, key: str, *, cacheable: bool = True) -> bytes:
-        """One object get through cache + pool + hedging."""
-        ck = (_store_token(store), key) if cacheable and self.cache.capacity else None
+    def fetch(self, store: Any, key: str, *, cacheable: bool = True,
+              cache_name: Optional[str] = None) -> bytes:
+        """One object get through cache + pool + hedging.
+
+        ``cache_name`` overrides the cache key (object key by default):
+        content-addressed reads pass :func:`content_cache_key` of the
+        block's hash so aliased paths share one cache entry.
+        """
+        ck = ((_store_token(store), cache_name or key)
+              if cacheable and self.cache.capacity else None)
         if ck is not None:
             hit = self.cache.get(ck)
             if hit is not None:
@@ -358,7 +418,9 @@ class ReadExecutor:
 
     def fetch_ordered(self, store: Any, keys: Sequence[str], *,
                       cacheable: bool = True,
-                      window: Optional[int] = None) -> Iterator[bytes]:
+                      window: Optional[int] = None,
+                      cache_names: Optional[Sequence[Optional[str]]] = None,
+                      ) -> Iterator[bytes]:
         """Fetch ``keys`` concurrently, yield results in input order.
 
         Submission is windowed (default ``2 * max_workers`` outstanding
@@ -366,15 +428,24 @@ class ReadExecutor:
         queue or starve concurrent readers; decode of block *i* overlaps
         the in-flight fetches of blocks > *i*. Pass ``window=`` to bound
         it explicitly — the stream loader's backpressure rides on this.
+        ``cache_names`` (aligned with ``keys``; None entries fall back to
+        the object key) names cache entries by content hash, as in
+        :meth:`fetch`.
         """
         keys = list(keys)
+        names: List[Optional[str]] = (list(cache_names) if cache_names
+                                      else [None] * len(keys))
+        if len(names) != len(keys):
+            raise ValueError("cache_names must align with keys")
         if window is None:
             window = 2 * self.max_workers
         window = max(int(window), 2)
         pending: List[Future] = []
 
-        def submit(key: str) -> Future:
-            ck = (_store_token(store), key) if cacheable and self.cache.capacity else None
+        def submit(i: int) -> Future:
+            key = keys[i]
+            ck = ((_store_token(store), names[i] or key)
+                  if cacheable and self.cache.capacity else None)
             if ck is not None:
                 hit = self.cache.get(ck)
                 if hit is not None:
@@ -386,11 +457,11 @@ class ReadExecutor:
             return self._io.submit(self._fetch_miss, store, key, ck)
 
         try:
-            for key in keys[:window]:
-                pending.append(submit(key))
+            for i in range(min(window, len(keys))):
+                pending.append(submit(i))
             for i in range(len(keys)):
                 if i + window < len(keys):
-                    pending.append(submit(keys[i + window]))
+                    pending.append(submit(i + window))
                 yield pending[i].result()
         finally:
             for f in pending:

@@ -16,21 +16,50 @@ while batches decode in plan order as their bytes arrive.
 
 from __future__ import annotations
 
+import hashlib
 import threading
 import uuid
+from collections import Counter
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
 from . import columnar
-from .compression import (CompressionSpec, encode_frame, parse_compression)
-from .io import ReadExecutor, get_default_executor, store_scope
+from .compression import (CompressionSpec, DeltaBase, encode_frame,
+                          parse_compression)
+from .io import (ReadExecutor, content_cache_key, get_default_executor,
+                 store_scope)
 from .log import (CommitConflict, DeltaLog, Snapshot, catalog_index_version)
 from .object_store import ObjectNotFoundError, ObjectStore
 
 # filter := {column: (lo, hi)} inclusive range; None bound = open
 Filters = Dict[str, Tuple[Optional[float], Optional[float]]]
+
+
+def chunk_hash(data: bytes) -> str:
+    """Content address of a part file's *decoded* bytes (blake2b-160).
+
+    Hashing pre-codec bytes makes the address independent of codec,
+    level, and shuffle settings, so re-encodes of identical content still
+    dedup. 160 bits keeps accidental collisions out of reach; the chunk
+    index additionally pairs every hash with its raw size and verifies
+    object existence on reuse (collision paranoia, see
+    :mod:`repro.core.cas`).
+    """
+    return hashlib.blake2b(data, digest_size=20).hexdigest()
+
+
+def physical_path(add: Dict[str, Any]) -> str:
+    """Relative object path holding this add-action's bytes.
+
+    Content-addressed dedup keeps the logical ``path`` unique per
+    add-action (the delta log's file map is path-keyed — two live adds
+    can never share a literal ``path``) while ``physPath`` points at the
+    shared stored object. Adds without ``physPath`` store their own
+    bytes.
+    """
+    return add.get("physPath") or add["path"]
 
 
 # in-flight two-phase uploads, per (store scope, table path) -> {rel path:
@@ -43,6 +72,14 @@ Filters = Dict[str, Tuple[Optional[float], Optional[float]]]
 # grace period, as in production Delta).
 _inflight_lock = threading.Lock()
 _inflight: Dict[Tuple[Any, str], Dict[str, int]] = {}
+
+# paths a running (in-process) vacuum has committed to deleting, per the
+# same key. Dedup's reuse check races vacuum's liveness scan: a writer may
+# look up a chunk the instant before vacuum deletes it. Vacuum condemns its
+# doomed paths here (under _inflight_lock, re-checking _inflight) before
+# the first delete; UploadGuard.reserve refuses condemned paths, so the
+# writer falls back to a fresh upload instead of referencing a dying object.
+_condemned: Dict[Tuple[Any, str], Set[str]] = {}
 
 
 class UploadGuard:
@@ -64,6 +101,21 @@ class UploadGuard:
             bucket = _inflight.setdefault(self._key, {})
             bucket[path] = bucket.get(path, 0) + 1
         self._paths.append(path)
+
+    def reserve(self, path: str) -> bool:
+        """Atomically register ``path`` unless a running vacuum condemned it.
+
+        The dedup reuse path pins an *existing* object through the commit
+        window with this: False means the object is mid-deletion and the
+        caller must upload fresh bytes instead of referencing it.
+        """
+        with _inflight_lock:
+            if path in _condemned.get(self._key, ()):
+                return False
+            bucket = _inflight.setdefault(self._key, {})
+            bucket[path] = bucket.get(path, 0) + 1
+        self._paths.append(path)
+        return True
 
     def close(self) -> None:
         """Deregister every path this guard added (idempotent)."""
@@ -102,6 +154,8 @@ class CompactResult:
     files_compacted: int = 0            # input files rewritten away
     files_written: int = 0              # merged files added
     files_recompressed: int = 0         # inputs rewritten under a new codec
+    files_skipped_shared: int = 0       # left alone: dedup'd/delta-stored
+    bytes_rewritten: int = 0            # physical bytes of the new files
     version: Optional[int] = None       # committed version (None = no commit)
     removed_paths: List[str] = field(default_factory=list)
 
@@ -257,6 +311,10 @@ class DeltaTable:
         self.path = path.rstrip("/")
         self.log = DeltaLog(store, self.path)
         self.io = io or get_default_executor()
+        # content-addressed chunk index (duck-typed; see repro.core.cas).
+        # The tensor store assigns one per table when dedup is on; a bare
+        # DeltaTable stays index-free and every append uploads its bytes.
+        self.cas: Optional[Any] = None
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -290,7 +348,10 @@ class DeltaTable:
                commit: bool = True,
                guard: Optional[UploadGuard] = None,
                compression: Union[None, str, CompressionSpec] = None,
-               shuffle_itemsize: int = 1) -> Dict[str, Any]:
+               shuffle_itemsize: int = 1,
+               cas: Optional[Any] = None,
+               dedup_seen: Optional[Set[str]] = None,
+               delta_base: Optional[DeltaBase] = None) -> Dict[str, Any]:
         """Write one parq-lite file; optionally defer the commit.
 
         With ``commit=False`` the data file is uploaded but invisible; the
@@ -301,17 +362,34 @@ class DeltaTable:
         a concurrent vacuum cannot mistake the not-yet-committed file for
         an orphan (registered before the first byte is uploaded).
 
-        ``compression`` (a spec like ``"zlib+shuffle"``) frames the file
-        under a chunk-blob codec; ``shuffle_itemsize`` is the stored dtype
-        width the byte-shuffle filter groups on (1 disables shuffling).
-        The add-action then records ``codec`` (what actually happened —
-        incompressible payloads fall back to ``"none"``), ``rawSize`` (the
+        ``compression`` (a spec like ``"zlib+shuffle"`` or
+        ``"zlib:9+shuffle"``) frames the file under a chunk-blob codec;
+        ``shuffle_itemsize`` is the stored dtype width the byte-shuffle
+        filter groups on (1 disables shuffling). The add-action then
+        records ``codec`` (what actually happened — incompressible
+        payloads fall back to ``"none"``), ``rawSize`` (the
         pre-compression length; ``size`` stays the stored length vacuum
         and the wire account in), and ``itemsize`` so later recompression
         (:meth:`compact`) can re-shuffle without re-learning the dtype.
         ``compression=None`` writes the exact pre-compression byte layout.
+
+        ``cas`` (a :class:`repro.core.cas.ChunkIndex`-shaped object)
+        enables content-addressed dedup: when the encoded file's decoded
+        bytes hash to an already-stored chunk, the returned add-action
+        references the existing object via ``physPath`` and **no bytes
+        are uploaded**. ``dedup_seen`` (a shared per-writer set of content
+        hashes) stops two files of ONE staged tensor from aliasing the
+        same object — the read scheduler's per-request completion
+        accounting assumes a tensor's files are distinct objects.
+        ``delta_base`` stores this file as an XOR delta against an
+        existing base object (recorded as ``deltaBase``/``deltaBaseHash``
+        on the add-action; reads reconstruct transparently).
         """
         spec = parse_compression(compression)
+        if delta_base is not None and (spec is None or not spec.active):
+            # an uncompressed XOR residue is exactly as large as the raw
+            # bytes — deltas only pay off under a codec, so default one
+            spec = parse_compression("zlib")
         framed = spec is not None and spec.active
         # under a file-level codec the built-in per-block zlib must stay
         # off: shuffling/compressing already-compressed blocks only burns
@@ -319,10 +397,25 @@ class DeltaTable:
         data, stats = columnar.write_table(columns, compress_blocks=not framed)
         add = {"path": f"part-{uuid.uuid4().hex}.pql", "stats": stats,
                "partitionValues": partition_values or {}, "dataChange": True}
+        content_hash: Optional[str] = None
+        if cas is not None or delta_base is not None:
+            content_hash = chunk_hash(data)
+            add["contentHash"] = content_hash
+        if cas is not None and content_hash is not None and \
+                (dedup_seen is None or content_hash not in dedup_seen):
+            reused = cas.reuse(self, content_hash, len(data), guard=guard)
+            if reused is not None:
+                add.update(reused)
+                if dedup_seen is not None:
+                    dedup_seen.add(content_hash)
+                if commit:
+                    self.log.commit([{"add": add}], op="WRITE")
+                return add
         if framed:
             raw_len = len(data)
             data, codec_id = encode_frame(data, spec,
-                                          itemsize=shuffle_itemsize)
+                                          itemsize=shuffle_itemsize,
+                                          delta_base=delta_base)
             if codec_id != "none":
                 add["codec"] = codec_id
                 add["rawSize"] = raw_len
@@ -335,10 +428,21 @@ class DeltaTable:
                 # fallback, or shuffle skipped for 1-byte dtypes): record
                 # the request so recompress-to-this-spec stays idempotent
                 add["codecRequested"] = spec.id
+            if delta_base is not None:
+                # mirrored from the frame header so vacuum's liveness scan
+                # and the read planner see the base dependency without
+                # fetching a single data byte
+                add["deltaBase"] = delta_base.key
+                if delta_base.content_hash:
+                    add["deltaBaseHash"] = delta_base.content_hash
         add["size"] = len(data)
         if guard is not None:
             guard.add(add["path"])
         self.store.put(f"{self.path}/{add['path']}", data)
+        if cas is not None and content_hash is not None:
+            cas.record(add)
+            if dedup_seen is not None:
+                dedup_seen.add(content_hash)
         if commit:
             self.log.commit([{"add": add}], op="WRITE")
         return add
@@ -394,8 +498,11 @@ class DeltaTable:
         executor; batches decode and yield in plan order, with ``filters``
         applied row-wise exactly as :meth:`scan` would.
         """
-        keys = [f"{self.path}/{add['path']}" for add in adds]
-        for data in self.io.fetch_ordered(self.store, keys):
+        keys = [f"{self.path}/{physical_path(add)}" for add in adds]
+        names = [content_cache_key(add["contentHash"])
+                 if add.get("contentHash") else None for add in adds]
+        for data in self.io.fetch_ordered(self.store, keys,
+                                          cache_names=names):
             batch = columnar.read_table(data, columns)
             yield _apply_mask(batch, _row_mask(batch, filters))
 
@@ -473,12 +580,22 @@ class DeltaTable:
         a re-plan from the fresh snapshot rather than a blind rebase.
         Compact never deletes bytes; the rewritten-away files stay in the
         object store for older snapshots until :meth:`vacuum`.
+
+        Content-addressed adds are preserved, never exploded: files whose
+        stored object is shared (dedup references via ``physPath``, or a
+        physical path referenced by more than one live add), and
+        delta-stored files (``deltaBase``), are skipped rather than
+        rewritten — merging them into per-group copies would multiply the
+        physical bytes dedup saved. ``bytes_rewritten`` in the result is
+        the *physical* size of the new files (what compact actually
+        uploaded), never the sum over referencing add-actions.
         """
         target = parse_compression(recompress)
         attempt = 0
         with self.guard_uploads() as guard:
             while True:
                 snap = self.log.snapshot()
+                refs = Counter(physical_path(a) for a in snap.add_actions())
                 groups: Dict[Tuple[Tuple[str, str], ...], List[Dict[str, Any]]] = {}
                 for add in snap.add_actions():
                     pv = add.get("partitionValues", {}) or {}
@@ -486,29 +603,38 @@ class DeltaTable:
                 new_adds: List[Dict[str, Any]] = []
                 removes: List[str] = []
                 recompressed = 0
+                skipped_shared = 0
                 for pv_items, adds in groups.items():
+                    rewritable = []
+                    for a in adds:
+                        if a.get("physPath") or a.get("deltaBase") \
+                                or refs[physical_path(a)] > 1:
+                            skipped_shared += 1
+                            continue
+                        rewritable.append(a)
                     mismatched = 0
                     if target is not None and \
                             dict(pv_items).get("kind") != "header":
                         mismatched = sum(
-                            1 for a in adds
+                            1 for a in rewritable
                             if a.get("codecRequested",
                                      a.get("codec", "none")) != target.id)
-                    if len(adds) <= 1 and not mismatched:
+                    if len(rewritable) <= 1 and not mismatched:
                         continue  # one file, right codec: nothing to do
-                    keys = [f"{self.path}/{a['path']}" for a in adds]
+                    keys = [f"{self.path}/{a['path']}" for a in rewritable]
                     batches = [columnar.read_table(data)
                                for data in self.io.fetch_ordered(self.store, keys)]
                     merged = _merge_batches(batches)
-                    spec, itemsize = _output_compression(adds, merged, target)
-                    removes.extend(a["path"] for a in adds)
+                    spec, itemsize = _output_compression(rewritable, merged,
+                                                         target)
+                    removes.extend(a["path"] for a in rewritable)
                     recompressed += mismatched
                     new_adds.append(self.append(
                         merged, commit=False,
                         partition_values=dict(pv_items), guard=guard,
                         compression=spec, shuffle_itemsize=itemsize))
                 if not new_adds:
-                    return CompactResult()  # commit-free no-op
+                    return CompactResult(files_skipped_shared=skipped_shared)
                 try:
                     v = self.commit_adds(new_adds, removes=removes, op="OPTIMIZE",
                                          expected_version=snap.version)
@@ -520,12 +646,32 @@ class DeltaTable:
                 return CompactResult(files_compacted=len(removes),
                                      files_written=len(new_adds),
                                      files_recompressed=recompressed,
+                                     files_skipped_shared=skipped_shared,
+                                     bytes_rewritten=sum(
+                                         int(a.get("size", 0))
+                                         for a in new_adds),
                                      version=v,
                                      removed_paths=removes)
 
+    def retained_versions(self, *, horizon: Optional[int] = None,
+                          extra_versions: Sequence[int] = ()) -> Set[int]:
+        """The versions a vacuum under these arguments would keep.
+
+        ``[horizon, latest]`` plus every in-range ``extra_versions`` entry
+        (leased snapshots). Empty for a nonexistent table.
+        """
+        latest = self.log.latest_version()
+        if latest < 0:
+            return set()
+        lo = latest if horizon is None else max(0, min(int(horizon), latest))
+        retained = set(range(lo, latest + 1))
+        retained.update(int(v) for v in extra_versions if 0 <= int(v) <= latest)
+        return retained
+
     def vacuum(self, *, horizon: Optional[int] = None,
                extra_versions: Sequence[int] = (),
-               dry_run: bool = False) -> VacuumResult:
+               dry_run: bool = False,
+               extra_live: Sequence[str] = ()) -> VacuumResult:
         """Delete data files referenced by no retained snapshot.
 
         ``horizon`` is the oldest version whose files must survive: every
@@ -539,47 +685,88 @@ class DeltaTable:
         treated as live: deleting them would corrupt the commit about to
         reference them.
 
+        Liveness is **reference-counted at the physical level**: an object
+        survives while ANY retained add-action references it — through
+        its own ``path``, through a dedup alias (``physPath``), or as the
+        ``deltaBase`` a delta-stored file reconstructs from. Deleting a
+        tensor therefore only reclaims the chunks nothing else shares.
+        ``extra_live`` injects additional relative paths to keep (the
+        sharded store passes cross-shard delta-base references here).
+
         Deleted paths are evicted from the shared executor's block cache —
         a vacuumed file must not keep serving from cache. Spilled catalog
         indexes (``_catalog/<v>.index.json``) for non-retained versions
-        are pruned alongside their snapshots. With ``dry_run`` nothing is
-        deleted; the result reports what would be.
+        are pruned alongside their snapshots; other ``_``-prefixed
+        metadata (including the ``_cas/`` chunk index) is never touched.
+        With ``dry_run`` nothing is deleted; the result reports what
+        would be.
         """
-        latest = self.log.latest_version()
-        if latest < 0:
+        retained = self.retained_versions(horizon=horizon,
+                                          extra_versions=extra_versions)
+        if not retained:
             return VacuumResult(dry_run=dry_run)
-        lo = latest if horizon is None else max(0, min(int(horizon), latest))
-        retained = set(range(lo, latest + 1))
-        retained.update(int(v) for v in extra_versions if 0 <= int(v) <= latest)
-        live: set = set()
+        prefix = f"{self.path}/"
+        live: set = set(extra_live)
         for v in sorted(retained):
-            live.update(self.log.snapshot(v).files)
-        live |= _inflight_paths((store_scope(self.store), self.path))
+            for path, a in self.log.snapshot(v).files.items():
+                live.add(a.get("physPath") or path)
+                db = a.get("deltaBase")
+                if db and db.startswith(prefix):
+                    live.add(db[len(prefix):])
+        ikey = (store_scope(self.store), self.path)
+        live |= _inflight_paths(ikey)
 
         res = VacuumResult(retained_versions=sorted(retained), dry_run=dry_run)
-        doomed: List[str] = []
-        prefix = f"{self.path}/"
+        doomed: List[Tuple[str, Optional[str]]] = []
         for key in list(self.store.list(prefix)):
             rel = key[len(prefix):]
             if rel.startswith("_"):
-                # metadata trees (_delta_log/, _catalog/, manifests) are
-                # never data files; indexes are pruned separately below
+                # metadata trees (_delta_log/, _catalog/, _cas/, manifests)
+                # are never data files; indexes are pruned separately below
                 iv = catalog_index_version(self.path, key)
                 if iv is not None and iv not in retained:
-                    doomed.append(key)
+                    doomed.append((key, None))
                     res.index_files_deleted += 1
                 continue
             if rel not in live:
-                doomed.append(key)
+                doomed.append((key, rel))
                 res.files_deleted += 1
                 res.deleted_paths.append(rel)
-        for key in doomed:
-            try:
-                res.bytes_reclaimed += self.store.head(key)
-            except ObjectNotFoundError:
-                continue  # raced another vacuum
-            if not dry_run:
-                self.store.delete(key)
+        condemned: Set[str] = set()
         if not dry_run and doomed:
-            self.io.invalidate(self.store, doomed)
+            # freeze the doomed set against concurrent dedup reuse: from
+            # here a writer's reserve() of any of these paths fails (it
+            # re-uploads instead); paths a writer registered in-flight
+            # since the liveness scan above are spared below
+            with _inflight_lock:
+                inflight_now = set(_inflight.get(ikey, ()))
+                condemned = {rel for _, rel in doomed
+                             if rel is not None and rel not in inflight_now}
+                _condemned.setdefault(ikey, set()).update(condemned)
+        try:
+            spared: Set[str] = set()
+            for key, rel in doomed:
+                if not dry_run and rel is not None and rel not in condemned:
+                    spared.add(rel)
+                    continue  # re-referenced mid-plan: now live
+                try:
+                    res.bytes_reclaimed += self.store.head(key)
+                except ObjectNotFoundError:
+                    continue  # raced another vacuum
+                if not dry_run:
+                    self.store.delete(key)
+            if spared:
+                res.files_deleted -= len(spared)
+                res.deleted_paths = [p for p in res.deleted_paths
+                                     if p not in spared]
+        finally:
+            if condemned:
+                with _inflight_lock:
+                    s = _condemned.get(ikey)
+                    if s is not None:
+                        s -= condemned
+                        if not s:
+                            _condemned.pop(ikey, None)
+        if not dry_run and doomed:
+            self.io.invalidate(self.store, [k for k, _ in doomed])
         return res

@@ -12,7 +12,17 @@ that grew large before spilling existed). ``--recompress zlib+shuffle``
 rewrites every data file under that chunk-blob codec during compact — the
 migration path for tables written before compression existed (run
 ``--vacuum`` afterwards, or in the same invocation, to reclaim the old
-raw generation once retention allows).
+raw generation once retention allows). ``--build-chunk-index`` backfills
+the content-addressed chunk index (``_cas/chunks.index.json``) from the
+latest snapshot — the migration path for tables written before dedup
+existed: afterwards, re-uploads of identical chunks (and ``put_variant``
+deltas) resolve against the pre-existing objects.
+
+Vacuum is **reference-counted**: a physical object is deleted only when
+no retained or leased snapshot references it — directly, through a
+deduplicated add-action (``physPath``), or as the base of a delta-stored
+file (``deltaBase``, including cross-shard references). Deleting one of
+several tensors sharing chunks therefore reclaims only the unshared ones.
 
 Leases protect only readers in *this* process; the horizon policy is what
 protects readers elsewhere — pick ``--keep-versions`` accordingly.
@@ -57,40 +67,62 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="also retain versions younger than TTL seconds")
     ap.add_argument("--spill-index", action="store_true",
                     help="write the spilled catalog index at latest version")
+    ap.add_argument("--build-chunk-index", action="store_true",
+                    help="backfill the content-addressed chunk index from "
+                         "the latest snapshot (enables dedup on tables "
+                         "written before it existed)")
     ap.add_argument("--dry-run", action="store_true",
                     help="report what vacuum would delete; change nothing")
     args = ap.parse_args(argv)
 
     if args.recompress:
         args.compact = True
-    if not (args.compact or args.vacuum or args.spill_index):
+    if not (args.compact or args.vacuum or args.spill_index
+            or args.build_chunk_index):
         ap.error("nothing to do: pass --compact (or --recompress), "
-                 "--vacuum and/or --spill-index")
+                 "--vacuum, --spill-index and/or --build-chunk-index")
     if args.dry_run and args.compact:
         print("[gc] --dry-run: skipping compact (it would commit)")
     if args.dry_run and args.spill_index:
         print("[gc] --dry-run: skipping --spill-index (it would write "
               "index files)")
+    if args.dry_run and args.build_chunk_index:
+        print("[gc] --dry-run: skipping --build-chunk-index (it would "
+              "write index files)")
 
     store = DeltaTensorStore(LocalFSObjectStore(args.dir), args.root)
     print(f"[gc] store {args.root!r}: {store.shards} shard(s), "
           f"version {store.version()}")
+
+    if args.build_chunk_index and not args.dry_run:
+        for shard, n in enumerate(store.build_chunk_index()):
+            print(f"[gc] shard {shard}: chunk index covers {n} objects")
 
     if args.compact and not args.dry_run:
         for shard, res in enumerate(store.compact(recompress=args.recompress)):
             if res:
                 extra = (f", {res.files_recompressed} recompressed"
                          if res.files_recompressed else "")
+                if res.files_skipped_shared:
+                    extra += (f", {res.files_skipped_shared} shared/delta "
+                              f"files left in place")
+                # bytes_rewritten counts physical output bytes once, not
+                # once per referencing add-action — the honest I/O bill
                 print(f"[gc] shard {shard}: compacted {res.files_compacted} "
-                      f"files -> {res.files_written}{extra} (v{res.version})")
+                      f"files -> {res.files_written}{extra}, "
+                      f"{_fmt_bytes(res.bytes_rewritten)} rewritten "
+                      f"(v{res.version})")
             else:
                 print(f"[gc] shard {shard}: compact no-op (commit-free)")
         if args.recompress:
             stats = store.storage_stats()
+            dd = stats["dedup"]
             print(f"[gc] storage after recompress: "
                   f"{_fmt_bytes(stats['physical_bytes'])} physical / "
                   f"{_fmt_bytes(stats['logical_bytes'])} logical "
-                  f"({stats['ratio']:.2f}x)")
+                  f"({stats['ratio']:.2f}x); dedup saved "
+                  f"{_fmt_bytes(dd['saved_bytes'])} across "
+                  f"{dd['deduped_refs']} refs")
 
     if args.spill_index and not args.dry_run:
         for key in store.spill_catalog():

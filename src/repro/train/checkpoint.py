@@ -78,7 +78,12 @@ class DeltaCheckpointer:
         manifest: Dict[str, str] = {}
         new_hashes: Dict[str, Tuple[str, str]] = {}
         # one WriteBatch = the whole checkpoint: part files upload invisibly
-        # as they are staged, then land in a single atomic commit
+        # as they are staged, then land in a single atomic commit. The
+        # leaf-hash skip above catches unchanged leaves in THIS process;
+        # leaves changed-then-reverted (or written by another host) still
+        # dedup at the chunk level — batch.put routes every upload through
+        # the store's content-addressed chunk index, so a byte-identical
+        # chunk commits as a reference to the existing object
         with self.store.batch(op=f"CHECKPOINT step={step}") as batch:
             for name, arr in leaves:
                 digest = _leaf_hash(arr)

@@ -551,3 +551,64 @@ def test_gc_cli_recompress_roundtrip(tmp_path, capsys):
     stats = reopened.storage_stats()
     assert stats["physical_bytes"] < raw_bytes
     assert stats["ratio"] > 2.0
+
+
+# ---------------------------------------------------------------------------
+# per-codec compression levels ("<codec>:<level>[+shuffle]")
+# ---------------------------------------------------------------------------
+
+
+def test_parse_compression_levels():
+    s = parse_compression("zlib:9+shuffle")
+    assert (s.codec, s.level, s.shuffle) == ("zlib", 9, True)
+    assert s.id == "zlib:9+shuffle"
+    assert parse_compression(s.id) == s          # id round-trips
+    assert parse_compression("zlib").level is None
+    for bad in ("zlib:", ":9", "zlib:x", "zlib:99", "none:3"):
+        with pytest.raises(ValueError):
+            parse_compression(bad)
+
+
+def test_frame_header_records_level():
+    raw = compressible((64, 64)).tobytes()
+    frame, codec_id = encode_frame(raw, parse_compression("zlib:9"))
+    assert codec_id == "zlib:9"
+    info = frame_info(frame)
+    assert info["codec"] == "zlib" and info["level"] == 9
+    assert decode_frame(frame) == raw
+    # level-less frames keep the old header shape (no "level" key)
+    frame0, _ = encode_frame(raw, parse_compression("zlib"))
+    assert "level" not in frame_info(frame0)
+    assert decode_frame(frame0) == raw
+
+
+def test_level_tradeoff_decodes_identically():
+    raw = compressible((128, 256)).tobytes()
+    lo, _ = encode_frame(raw, parse_compression("zlib:1"))
+    hi, _ = encode_frame(raw, parse_compression("zlib:9"))
+    assert decode_frame(lo) == raw == decode_frame(hi)
+    assert len(hi) <= len(lo)  # more effort never stores more (zlib)
+
+
+def test_recompress_across_levels_is_idempotent():
+    store = fresh(compression="zlib:1+shuffle")
+    x = compressible((8, 64, 64))
+    store.put(x, layout="ftsf", tensor_id="t")
+    res = store.compact(recompress="zlib:9+shuffle")
+    assert sum(r.files_recompressed for r in res) > 0
+    assert np.array_equal(store.get("t"), x)
+    # the add-actions now record the levelled codec id: a second pass
+    # under the same spec must be a commit-free no-op
+    again = store.compact(recompress="zlib:9+shuffle")
+    assert sum(r.files_recompressed for r in again) == 0
+    assert all(r.version is None for r in again)
+    assert np.array_equal(store.get("t"), x)
+
+
+def test_level_store_default_roundtrip():
+    store = fresh(compression="zlib:9+shuffle")
+    x = compressible((4, 32, 32))
+    store.put(x, layout="ftsf", tensor_id="t")
+    codecs = store.storage_stats()["by_codec"]
+    assert any(c.startswith("zlib:9") for c in codecs), codecs
+    assert np.array_equal(store.get("t"), x)
