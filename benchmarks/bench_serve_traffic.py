@@ -1,0 +1,289 @@
+"""Multi-tenant serving gateway under mixed cold-start/warm traffic.
+
+Open-loop traffic (arrivals don't wait for completions) against the
+modeled object store (paper testbed: 1 Gbps, 10 ms RTT, virtual clock)
+through :class:`~repro.serve.gateway.Gateway`, in three phases:
+
+* **cold-start coalescing** — N tenants simultaneously cold-start the
+  same fine-tune variant. Baseline: N independent frontends (separate
+  ``DeltaTensorStore`` clients, private cold-cache executors) each
+  running its own ``ModelRepo.load`` against the shared object store.
+  Gateway: the same N loads single-flighted on ``(prefix, version)`` —
+  one merged fetch plan, the variant's delta-base chunks fetched once.
+  Gate: the baseline issues >= 2x the store requests.
+* **cache partitioning** — a hot tenant's base model is pinned in a
+  budgeted "hot" priority class while long-tail tenants churn variant
+  reads through an undersized default partition. Gate: the long-tail
+  churn evicts constantly, yet a warm re-read of the hot base (pinned
+  version vector) issues ZERO object-store requests.
+* **fairness + SLO + shedding** — 8 equal-weight tenants burst-submit
+  adversarially ordered (tenant 0's whole batch first); weighted fair
+  queueing must serve them evenly anyway. Gates: mid-run Jain index over
+  per-tenant work done >= 0.8; per-tenant p99 (virtual clock) non-null;
+  a flooding tenant with a bounded queue sheds with ``RetryAfter``
+  instead of deadlocking.
+
+Run as ``python -m benchmarks.bench_serve_traffic`` to (re)write
+``BENCH_serve_traffic.json`` for the regression gate.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import DeltaTensorStore
+from repro.lake import ReadExecutor
+from repro.serve import Gateway, ModelRepo, RetryAfter, TenantPolicy
+
+from .common import fresh_store, row
+
+N_TENANTS = 6          # coalescing phase: tenants cold-starting one model
+N_LEAVES = 6
+LEAF_SHAPE = (64, 1024)            # 256 KiB float32 per leaf
+N_VARIANTS = 8         # long-tail churn working set
+FAIR_TENANTS = 8
+FAIR_JOBS = 24         # reads each fairness tenant burst-submits
+SEED = 23
+
+
+def _params(seed: int, scale: float = 1.0):
+    rng = np.random.default_rng(seed)
+    return {f"layer{i}": (scale * rng.standard_normal(LEAF_SHAPE)
+                          ).astype(np.float32)
+            for i in range(N_LEAVES)}
+
+
+def _seeded_store(width: int, cache_bytes: int = 0, variants: int = 1):
+    """Modeled store holding a base model + ``variants`` fine-tunes."""
+    obj, lm = fresh_store(parallelism=width)
+    io = ReadExecutor(max_workers=width, cache_bytes=cache_bytes)
+    store = DeltaTensorStore(obj, "weights", io=io)
+    base = _params(SEED)
+    with store.models("base") as repo:
+        repo.save(base)
+        for v in range(variants):
+            # sparse perturbation: most chunks dedup, changed ones XOR-delta
+            ft = {k: arr.copy() for k, arr in base.items()}
+            ft[f"layer{v % N_LEAVES}"] = ft[f"layer{v % N_LEAVES}"] + 0.01
+            with repo.open_variant(f"ft{v}") as var:
+                var.save(ft)
+    return obj, lm, store, base
+
+
+# -- phase 1: cold-start coalescing -------------------------------------------
+
+def _bench_coalesce():
+    template = _params(SEED)
+
+    # baseline: N independent frontends, each a private client + executor
+    obj, lm, store, _ = _seeded_store(width=8)
+    clients = [DeltaTensorStore(obj, "weights",
+                                io=ReadExecutor(max_workers=8))
+               for _ in range(N_TENANTS)]
+    lm.reset()
+    for client in clients:
+        with ModelRepo(client, "base~ft0") as repo:
+            repo.load(template)
+    uncoalesced_requests = lm.requests
+    uncoalesced_io_s = lm.elapsed_s
+
+    # gateway: same N loads, single-flighted on (prefix, pinned version)
+    obj, lm, store, _ = _seeded_store(width=8)
+    with Gateway(store, max_inflight=8,
+                 clock=lambda: lm.elapsed_s) as gw:
+        lm.reset()
+        futures = [gw.load_model(f"t{i}", "base~ft0", template)
+                   for i in range(N_TENANTS)]
+        trees = [f.result(60) for f in futures]
+        coalesced_requests = lm.requests
+        coalesced_io_s = lm.elapsed_s
+        stats = gw.stats()
+    ref = trees[0]
+    identical = all(
+        all(np.array_equal(t[k], ref[k]) for k in ref) for t in trees)
+
+    ratio = uncoalesced_requests / max(1, coalesced_requests)
+    return {
+        "tenants": N_TENANTS,
+        "uncoalesced_requests": uncoalesced_requests,
+        "uncoalesced_io_s": uncoalesced_io_s,
+        "coalesced_requests": coalesced_requests,
+        "coalesced_io_s": coalesced_io_s,
+        "requests_ratio": ratio,
+        "flights_created": stats["flights_created"],
+        "coalesced_hits": stats["coalesced_hits"],
+        "trees_identical": identical,
+    }
+
+
+# -- phase 2: partitioned cache under long-tail churn -------------------------
+
+def _bench_partition():
+    base_bytes = N_LEAVES * int(np.prod(LEAF_SHAPE)) * 4
+    # default partition deliberately smaller than the variant working set;
+    # hot partition comfortably holds the base model
+    obj, lm, store, base = _seeded_store(
+        width=8, cache_bytes=2 * base_bytes, variants=N_VARIANTS)
+    vec = store.catalog().version_vector
+    with Gateway(store, max_inflight=8,
+                 partitions={"hot": {"bytes": 4 * base_bytes,
+                                     "pinned": True}},
+                 clock=lambda: lm.elapsed_s) as gw:
+        gw.register("hot", TenantPolicy(weight=4.0, max_inflight=4,
+                                        cache_partition="hot"))
+        for i in range(4):
+            gw.register(f"tail{i}", TenantPolicy(max_inflight=2))
+
+        # hot tenant cold-starts the base into its pinned partition
+        gw.load_model("hot", "base", base, version=vec).result(60)
+
+        # long-tail churn: variants cycle through the undersized default
+        for rnd in range(3):
+            futs = [gw.load_model(f"tail{i % 4}", f"base~ft{v}", base,
+                                  version=vec)
+                    for i, v in enumerate(range(N_VARIANTS))]
+            for f in futs:
+                f.result(60)
+
+        parts = store.io.cache.partitions()
+        # warm re-read of every hot-base leaf at the pinned vector: the
+        # priority class must have protected it through the churn
+        lm.reset()
+        futs = [gw.read("hot", f"base/layer{i}", version=vec)
+                for i in range(N_LEAVES)]
+        for f in futs:
+            f.result(60)
+        warm_requests = lm.requests
+        warm_io_s = lm.elapsed_s
+
+    return {
+        "base_bytes": base_bytes,
+        "default_evictions": parts["default"]["evictions"],
+        "hot_evictions": parts["hot"]["evictions"],
+        "hot_cached_bytes": parts["hot"]["nbytes"],
+        "warm_base_requests": warm_requests,
+        "warm_base_io_s": warm_io_s,
+    }
+
+
+# -- phase 3: weighted fairness, SLOs, shedding -------------------------------
+
+def _bench_fairness():
+    obj, lm, store, base = _seeded_store(width=8)
+    vec = store.catalog().version_vector
+    tids = [f"base/layer{i}" for i in range(N_LEAVES)]
+    with Gateway(store, max_inflight=4,
+                 clock=lambda: lm.elapsed_s) as gw:
+        for i in range(FAIR_TENANTS):
+            gw.register(f"f{i}", TenantPolicy(weight=1.0, max_inflight=2,
+                                              queue_limit=FAIR_JOBS,
+                                              p99_target_s=5.0))
+        lm.reset()
+        # adversarial burst order: tenant 0's entire batch lands first
+        futs = []
+        for i in range(FAIR_TENANTS):
+            for j in range(FAIR_JOBS):
+                futs.append(gw.submit(
+                    f"f{i}",
+                    lambda t=tids[j % N_LEAVES]: store.read_many(
+                        [(t, None)], version=vec)[0]))
+        # snapshot fairness mid-run (~half done): FIFO would be ~1/k here
+        half = FAIR_TENANTS * FAIR_JOBS // 2
+        while sum(s["completed"]
+                  for s in gw.tenant_stats().values()) < half:
+            time.sleep(0.002)
+        jain_half = gw.fairness()
+        for f in futs:
+            f.result(60)
+        jain_final = gw.fairness()
+        slo = gw.slo_report()
+        p99s = [s["p99_s"] for s in slo.values() if s["p99_s"] is not None]
+
+        # shedding: flood a tenant whose queue holds 4 and serves 1 at a
+        # time; beyond-capacity submissions must reject, never deadlock
+        gw.register("flood", TenantPolicy(max_inflight=1, queue_limit=4))
+        accepted, shed = [], 0
+        for _ in range(50):
+            try:
+                accepted.append(gw.submit(
+                    "flood",
+                    lambda: store.read_many([(tids[0], None)],
+                                            version=vec)[0]))
+            except RetryAfter:
+                shed += 1
+        for f in accepted:
+            f.result(60)
+
+    return {
+        "tenants": FAIR_TENANTS,
+        "jobs_per_tenant": FAIR_JOBS,
+        "jain_mid_run": jain_half,
+        "jain_final": jain_final,
+        "p99_max_s": max(p99s) if p99s else None,
+        "p99_targets_met": sum(1 for s in slo.values() if s["met"]),
+        "shed_submitted": 50,
+        "shed_accepted": len(accepted),
+        "shed_rejected": shed,
+    }
+
+
+def run(json_path=None):
+    lines = []
+    results = {"bench": "serve_traffic", "leaves": N_LEAVES,
+               "leaf_shape": list(LEAF_SHAPE), "variants": N_VARIANTS}
+
+    co = _bench_coalesce()
+    results["coalesce"] = co
+    lines.append(row(
+        "serve_coldstart_coalesce", co["coalesced_io_s"] * 1e6,
+        f"requests {co['uncoalesced_requests']}->"
+        f"{co['coalesced_requests']} ratio={co['requests_ratio']:.1f}x "
+        f"flights={co['flights_created']} hits={co['coalesced_hits']} "
+        f"identical={co['trees_identical']}"))
+
+    pa = _bench_partition()
+    results["partition"] = pa
+    lines.append(row(
+        "serve_partitioned_cache", pa["warm_base_io_s"] * 1e6,
+        f"warm_base_requests={pa['warm_base_requests']} "
+        f"default_evictions={pa['default_evictions']} "
+        f"hot_evictions={pa['hot_evictions']}"))
+
+    fa = _bench_fairness()
+    results["fairness"] = fa
+    lines.append(row(
+        "serve_fair_queueing", 0.0,
+        f"jain_mid={fa['jain_mid_run']:.3f} "
+        f"jain_final={fa['jain_final']:.3f} "
+        f"p99_max_s={fa['p99_max_s']} shed={fa['shed_rejected']}/50"))
+
+    results["gate"] = {
+        "coalesce_requests_ratio": co["requests_ratio"],
+        "coalesced_dedups": co["coalesced_hits"],
+        "trees_identical": co["trees_identical"],
+        "warm_base_requests": pa["warm_base_requests"],
+        "default_evictions": pa["default_evictions"],
+        "jain_mid_run": fa["jain_mid_run"],
+        "p99_max_s": fa["p99_max_s"],
+        "shed_rejected": fa["shed_rejected"],
+    }
+    g = results["gate"]
+    lines.append(row(
+        "serve_traffic_gate", 0.0,
+        f"ratio={g['coalesce_requests_ratio']:.1f}x "
+        f"warm_requests={g['warm_base_requests']} "
+        f"jain={g['jain_mid_run']:.3f} shed={g['shed_rejected']}"))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(json_path="BENCH_serve_traffic.json"):
+        print(line)

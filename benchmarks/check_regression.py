@@ -30,7 +30,15 @@ configuration lost a write. Gated metrics:
   8-variant fine-tune fan-out, plus the invariants that the variants add
   at most 2.5x the base's physical bytes, that deleting half the
   variants + vacuum reclaims EXACTLY their unshared objects, and that
-  leased reads stayed byte-identical through the churn.
+  leased reads stayed byte-identical through the churn;
+* ``BENCH_serve_traffic.json`` — gateway cold-start coalescing: store
+  requests issued by N independent frontends vs the single-flighted
+  gateway (also hard-floored at 2.0x, with >= 1 coalesced flight join
+  and byte-identical trees for every waiter), the invariant that a warm
+  re-read of the pinned hot-base partition issues ZERO store requests
+  while long-tail churn evicts, the mid-run Jain fairness index across
+  burst-submitting tenants (hard floor 0.80), a non-null per-tenant p99,
+  and at least one shed request from the flooded bounded queue.
 
 Improvements never fail the gate; commit a refreshed baseline JSON when a
 PR deliberately moves a metric.
@@ -60,6 +68,10 @@ GATES = [
      lambda d: float(d["gate"]["loader_vs_serial_w8"])),
     ("BENCH_dedup.json", "naive vs CAS physical bytes (8-variant fan-out)",
      lambda d: float(d["gate"]["naive_vs_dedup"])),
+    ("BENCH_serve_traffic.json", "gateway cold-start coalescing request ratio",
+     lambda d: float(d["gate"]["coalesce_requests_ratio"])),
+    ("BENCH_serve_traffic.json", "mid-run Jain fairness under burst traffic",
+     lambda d: float(d["gate"]["jain_mid_run"])),
 ]
 
 # invariants checked on the fresh run only (no baseline comparison)
@@ -68,6 +80,8 @@ MIN_COMPRESSION_REDUCTION = 2.0       # vs raw tensor bytes (acceptance)
 MAX_COMPRESSED_READ_OVERHEAD = 1.25   # full-read makespan vs uncompressed
 MIN_LOADER_VS_SERIAL_W8 = 2.0         # streaming loader throughput (acceptance)
 MAX_VARIANTS_VS_BASE = 2.5            # 8 variants' physical bytes vs base
+MIN_COALESCE_RATIO = 2.0              # uncoalesced/coalesced store requests
+MIN_SERVE_FAIRNESS = 0.80             # mid-run Jain index (acceptance)
 
 
 def _load(path: str) -> dict:
@@ -184,6 +198,45 @@ def main(argv=None) -> int:
         print(f"[OK] dedup: variants at {vratio:.2f}x base physical "
               f"(naive {float(dgate['naive_vs_dedup']):.2f}x larger), "
               f"churn reclaim exact, leased reads identical")
+
+    serve = _load(os.path.join(args.fresh, "BENCH_serve_traffic.json"))
+    sgate = serve["gate"]
+    sratio = float(sgate["coalesce_requests_ratio"])
+    if sratio < MIN_COALESCE_RATIO:
+        print(f"[REGRESSION] gateway coalescing saved only {sratio:.2f}x "
+              f"store requests < hard floor {MIN_COALESCE_RATIO:.2f}x")
+        failures.append("gateway coalesce ratio floor")
+    if int(sgate.get("coalesced_dedups", 0)) < 1:
+        print("[REGRESSION] no cold-start load joined an existing flight; "
+              "single-flight coalescing is dead")
+        failures.append("gateway coalesced_dedups")
+    if not sgate.get("trees_identical"):
+        print("[REGRESSION] coalesced waiters received non-identical "
+              "weight trees")
+        failures.append("gateway coalesced tree identity")
+    if int(sgate.get("warm_base_requests", -1)) != 0:
+        print(f"[REGRESSION] warm hot-base re-read issued "
+              f"{sgate.get('warm_base_requests')} store request(s); the "
+              f"pinned partition must serve it with 0")
+        failures.append("gateway warm-base requests")
+    sjain = float(sgate["jain_mid_run"])
+    if sjain < MIN_SERVE_FAIRNESS:
+        print(f"[REGRESSION] mid-run Jain fairness {sjain:.3f} "
+              f"< hard floor {MIN_SERVE_FAIRNESS:.2f}")
+        failures.append("gateway fairness floor")
+    if sgate.get("p99_max_s") is None:
+        print("[REGRESSION] per-tenant p99 is null; SLO histograms "
+              "must report")
+        failures.append("gateway p99 missing")
+    if int(sgate.get("shed_rejected", 0)) < 1:
+        print("[REGRESSION] flooded bounded queue shed nothing; "
+              "overload protection is dead")
+        failures.append("gateway shedding")
+    if not [f for f in failures if f.startswith("gateway")]:
+        print(f"[OK] gateway: coalescing saved {sratio:.2f}x requests, "
+              f"warm hot-base at 0 store requests, Jain {sjain:.3f}, "
+              f"p99 {float(sgate['p99_max_s']):.4f}s, "
+              f"{int(sgate['shed_rejected'])} shed")
 
     if failures:
         print(f"FAIL: {len(failures)} gate(s) regressed: "

@@ -6,8 +6,9 @@ Requests with ragged prompt lengths stream through a fixed pool of slots;
 a finished sequence's slot is immediately re-admitted from the queue.
 
 With ``--from-store`` the weights round-trip through the Delta Tensor
-store first: saved as one FTSF tensor per param leaf, then cold-start
-loaded with every leaf fetched in parallel on the shared ReadExecutor.
+store first via the ``store.models(prefix)`` handle: saved as one FTSF
+tensor per param leaf, then cold-start loaded with every leaf fetched in
+parallel on the shared ReadExecutor.
 """
 
 import argparse
@@ -17,7 +18,7 @@ import jax
 import numpy as np
 
 from repro.models import get_arch, transformer
-from repro.serve import Request, ServeEngine, load_weights, save_weights
+from repro.serve import Request, ServeEngine
 
 
 def main():
@@ -41,9 +42,10 @@ def main():
         from repro.lake import InMemoryObjectStore, ReadExecutor
         store = DeltaTensorStore(InMemoryObjectStore(), "weights",
                                  io=ReadExecutor(max_workers=8))
-        save_weights(store, params, prefix=cfg.name)
-        t0 = time.time()
-        params = load_weights(store, params, prefix=cfg.name)
+        with store.models(cfg.name) as repo:
+            repo.save(params)
+            t0 = time.time()
+            params = repo.load(params)
         st = store.io.stats
         print(f"weights loaded from delta store in {time.time() - t0:.2f}s "
               f"(gets={st.gets} cache_hits={st.cache_hits})")

@@ -49,7 +49,7 @@ from typing import (TYPE_CHECKING, Any, Dict, Iterator, List, Optional,
 import numpy as np
 
 from ..lake import columnar
-from ..lake.io import content_cache_key
+from ..lake.io import ReadExecutor, content_cache_key
 from ..lake.log import Snapshot
 from ..lake.table import Filters, file_overlaps, filter_rows, physical_path
 from .encodings.base import (SparseCOO, get_codec, header_dtype,
@@ -236,8 +236,8 @@ class Catalog:
 
     # -- cross-tensor fetch scheduling ----------------------------------------
 
-    def plan_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]]
-                  ) -> "FetchPlan":
+    def plan_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]],
+                  *, io: Optional["ReadExecutor"] = None) -> "FetchPlan":
         """Build ONE merged fetch plan for many ``(tid, slices)`` requests.
 
         Each request is a tensor id plus an optional per-axis slice list
@@ -268,7 +268,7 @@ class Catalog:
         # plan_many may itself be running inside a work-pool job (a
         # stream-loader batch fetch) and a work-on-work wait could
         # deadlock a saturated pool.
-        io = self._store.io
+        io = io or self._store.io
         if io.cache.capacity:
             keys = []
             for tid in dict.fromkeys(t for t, _ in requests):
@@ -335,7 +335,9 @@ class Catalog:
                          keys_deduped=deduped, cache_names=cache_names)
 
     def read_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]],
-                  *, window: Optional[int] = None) -> List[np.ndarray]:
+                  *, window: Optional[int] = None,
+                  io: Optional["ReadExecutor"] = None,
+                  cache_partition: Optional[str] = None) -> List[np.ndarray]:
         """Read many tensors/slices through one merged fetch plan.
 
         The plan's unique keys stream through the shared executor's
@@ -351,10 +353,13 @@ class Catalog:
         concurrent vacuum cannot delete planned files mid-plan.
 
         ``window`` bounds outstanding gets (the stream loader's
-        backpressure); None uses the executor default.
+        backpressure); None uses the executor default. ``io`` overrides
+        the store's shared executor (width sweeps, a caller-owned pool);
+        ``cache_partition`` routes fetched blocks into that block-cache
+        priority class (the gateway pins hot base-model weights this way).
         """
-        plan = self.plan_many(requests)
-        io = self._store.io
+        io = io or self._store.io
+        plan = self.plan_many(requests, io=io)
         io.stats.bump(plans=1, plan_requests=len(plan.requests),
                       plan_keys_fetched=len(plan.unique_keys),
                       plan_keys_deduped=plan.keys_deduped)
@@ -380,7 +385,8 @@ class Catalog:
                     finish(i)  # fully pruned (or chunkless) request
             store = self.table_for(0).store
             fetched = io.fetch_ordered(store, plan.unique_keys, window=window,
-                                       cache_names=plan.cache_names or None)
+                                       cache_names=plan.cache_names or None,
+                                       cache_partition=cache_partition)
             for key, data in zip(plan.unique_keys, fetched):
                 waiters = waiting.get(key, ())
                 if not waiters:

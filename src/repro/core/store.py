@@ -838,15 +838,33 @@ class DeltaTensorStore:
 
     def read_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]], *,
                   version: VersionArg = None,
-                  window: Optional[int] = None) -> List[np.ndarray]:
+                  window: Optional[int] = None,
+                  io: Optional[ReadExecutor] = None,
+                  cache_partition: Optional[str] = None) -> List[np.ndarray]:
         """Read many ``(tid, slices)`` requests through ONE merged fetch
         plan (see :meth:`~repro.core.catalog.Catalog.read_many`): shared
         chunk keys are fetched once, adjacent requests' files stream
         through the windowed executor, and each request decodes as soon
         as its last file lands. ``slices=None`` reads a tensor in full.
         Results come back in request order, all pinned to one snapshot.
+        ``io`` overrides the shared executor; ``cache_partition`` names
+        the block-cache priority class the fetched blocks land in.
         """
-        return self.catalog(version).read_many(requests, window=window)
+        return self.catalog(version).read_many(
+            requests, window=window, io=io, cache_partition=cache_partition)
+
+    def models(self, prefix: str, *, version: VersionArg = None):
+        """A :class:`~repro.serve.repo.ModelRepo` handle over ``prefix``.
+
+        The serving-weights API: ``repo.save(params)`` persists a param
+        pytree (one tensor per leaf, one atomic commit),
+        ``repo.load(template)`` reads it back through one merged fetch
+        plan, ``repo.open_variant(name)`` stores fine-tunes as delta
+        variants of this repo's leaves. The repo is snapshot-pinned and
+        lease-holding like :class:`~repro.core.catalog.TensorRef`.
+        """
+        from ..serve.repo import ModelRepo  # serve sits above core
+        return ModelRepo(self, prefix, version=version)
 
     # -- catalog conveniences -------------------------------------------------
 

@@ -10,7 +10,11 @@ weight loading) funnels its object-store fetches through one
   fetch layer is the reference design here);
 * an **LRU block cache** keyed by ``(store, object key)`` holding immutable
   data-file bytes — delta data files are write-once, so cached blocks can
-  never go stale; log/metadata reads bypass the cache;
+  never go stale; log/metadata reads bypass the cache. The cache is split
+  into **priority-class partitions** with independent byte budgets
+  (``cache.add_partition``): long-tail churn in one class can never evict
+  another class's working set — how the serving gateway keeps a hot base
+  model resident while variant traffic churns;
 * **transparent decompression**: part files framed by a chunk-blob codec
   (:mod:`repro.lake.compression`) are unframed as they arrive off the
   wire, so the cache stores *decoded* blocks — a warm read pays neither
@@ -243,59 +247,173 @@ class ReadStats:
         self.latency.reset()
 
 
+DEFAULT_PARTITION = "default"
+
+
+class _Partition:
+    """One priority class inside the block cache: its own LRU + budget."""
+
+    __slots__ = ("capacity", "pinned", "blocks", "nbytes", "evictions")
+
+    def __init__(self, capacity_bytes: int, pinned: bool = False):
+        self.capacity = int(capacity_bytes)
+        self.pinned = pinned
+        self.blocks: "OrderedDict[Tuple[int, str], bytes]" = OrderedDict()
+        self.nbytes = 0
+        self.evictions = 0
+
+
 class BlockCache:
-    """Thread-safe LRU over immutable blocks, bounded by total bytes."""
+    """Thread-safe LRU over immutable blocks, bounded by per-partition bytes.
+
+    The cache is split into **partitions** (priority classes), each with
+    its own byte budget and LRU order. Eviction pressure never crosses a
+    partition boundary: a long-tail scan churning the ``default``
+    partition cannot evict blocks a higher-priority class (a pinned hot
+    base model) holds — the serving gateway's cache-isolation story.
+    Lookups are partition-blind (one global key -> partition map), so a
+    block cached by any class serves every reader; a ``get`` that names a
+    different partition *promotes* the block into it (a hot-class read
+    rescues a base-model block that first arrived as a long-tail delta
+    prefetch). ``add_partition(pinned=True)`` makes a class reject inserts
+    past its budget instead of evicting — a hard pin for working sets
+    that must never churn — and its residents never demote: lower-priority
+    readers are served from the pinned copy in place.
+
+    ``BlockCache(capacity_bytes)`` with no extra partitions behaves
+    exactly like the old single-LRU cache (one ``default`` partition).
+    """
 
     def __init__(self, capacity_bytes: int = DEFAULT_CACHE_BYTES):
         self.capacity = int(capacity_bytes)
-        self._blocks: "OrderedDict[Tuple[int, str], bytes]" = OrderedDict()
-        self._bytes = 0
+        self._parts: Dict[str, _Partition] = {
+            DEFAULT_PARTITION: _Partition(self.capacity)}
+        self._where: Dict[Tuple[int, str], str] = {}
         self._lock = threading.Lock()
 
-    def get(self, key: Tuple[int, str]) -> Optional[bytes]:
-        """The cached block (refreshing its LRU position) or None."""
+    # -- partition management -------------------------------------------------
+
+    def add_partition(self, name: str, capacity_bytes: int, *,
+                      pinned: bool = False) -> None:
+        """Create (or resize) priority class ``name`` with its own budget.
+
+        ``pinned`` partitions reject inserts past their budget instead of
+        evicting — resident blocks can only leave via ``invalidate`` /
+        ``clear``. Re-adding an existing partition adjusts its budget (and
+        evicts down to it for LRU partitions) without dropping blocks.
+        """
+        if name == DEFAULT_PARTITION:
+            raise ValueError("the default partition always exists; "
+                             "size it via the cache capacity")
         with self._lock:
-            data = self._blocks.get(key)
-            if data is not None:
-                self._blocks.move_to_end(key)
+            part = self._parts.get(name)
+            if part is None:
+                self._parts[name] = _Partition(capacity_bytes, pinned)
+                return
+            part.capacity = int(capacity_bytes)
+            part.pinned = pinned
+            if not pinned:
+                self._evict_locked(part)
+
+    def partitions(self) -> Dict[str, Dict[str, int]]:
+        """Per-partition occupancy: name -> {capacity, nbytes, blocks,
+        evictions} (the gateway's cache-isolation observability)."""
+        with self._lock:
+            return {name: {"capacity_bytes": p.capacity, "nbytes": p.nbytes,
+                           "blocks": len(p.blocks), "evictions": p.evictions,
+                           "pinned": int(p.pinned)}
+                    for name, p in self._parts.items()}
+
+    def _evict_locked(self, part: _Partition) -> None:
+        while part.nbytes > part.capacity:
+            key, evicted = part.blocks.popitem(last=False)
+            part.nbytes -= len(evicted)
+            part.evictions += 1
+            self._where.pop(key, None)
+
+    # -- block access ----------------------------------------------------------
+
+    def get(self, key: Tuple[int, str],
+            partition: Optional[str] = None) -> Optional[bytes]:
+        """The cached block (refreshing its LRU position) or None.
+
+        Lookup spans all partitions. When ``partition`` names a different
+        class than the block's current home, the hit **promotes** the
+        block into the named partition (subject to that partition's
+        budget), so priority follows the readers actually touching it —
+        unless the home is *pinned*: a pinned class never loses residents
+        to lower-priority readers (the long-tail variant churn reading a
+        hot tenant's base chunks must not demote them into its own
+        churning partition).
+        """
+        with self._lock:
+            home = self._where.get(key)
+            if home is None:
+                return None
+            part = self._parts[home]
+            data = part.blocks[key]
+            if partition is not None and partition != home \
+                    and partition in self._parts and not part.pinned:
+                self._put_locked(key, data, partition)
+            else:
+                part.blocks.move_to_end(key)
             return data
 
-    def put(self, key: Tuple[int, str], data: bytes) -> None:
-        """Insert a block, evicting LRU entries past the byte budget."""
-        if len(data) > self.capacity:
-            return  # never evict the whole cache for one oversized block
+    def _put_locked(self, key: Tuple[int, str], data: bytes,
+                    partition: str) -> None:
+        part = self._parts[partition]
+        if len(data) > part.capacity:
+            return  # never churn a whole partition for one oversized block
+        if part.pinned and part.nbytes + len(data) > part.capacity:
+            return  # pinned class is full: reject, never evict residents
+        home = self._where.get(key)
+        if home is not None:
+            old_part = self._parts[home]
+            if old_part.pinned and home != partition:
+                old_part.blocks.move_to_end(key)
+                return  # pinned residents never demote to another class
+            old = old_part.blocks.pop(key)
+            old_part.nbytes -= len(old)
+        part.blocks[key] = data
+        part.nbytes += len(data)
+        self._where[key] = partition
+        self._evict_locked(part)
+
+    def put(self, key: Tuple[int, str], data: bytes,
+            partition: Optional[str] = None) -> None:
+        """Insert a block into ``partition`` (default class when None),
+        evicting that partition's LRU entries past its byte budget."""
+        name = partition if partition in self._parts else DEFAULT_PARTITION
         with self._lock:
-            old = self._blocks.pop(key, None)
-            if old is not None:
-                self._bytes -= len(old)
-            self._blocks[key] = data
-            self._bytes += len(data)
-            while self._bytes > self.capacity:
-                _, evicted = self._blocks.popitem(last=False)
-                self._bytes -= len(evicted)
+            self._put_locked(key, data, name)
 
     def invalidate(self, key: Tuple[int, str]) -> None:
         """Drop one block (deleted objects must not serve from cache)."""
         with self._lock:
-            old = self._blocks.pop(key, None)
-            if old is not None:
-                self._bytes -= len(old)
+            home = self._where.pop(key, None)
+            if home is not None:
+                part = self._parts[home]
+                old = part.blocks.pop(key, None)
+                if old is not None:
+                    part.nbytes -= len(old)
 
     def clear(self) -> None:
-        """Drop every cached block."""
+        """Drop every cached block (all partitions; budgets survive)."""
         with self._lock:
-            self._blocks.clear()
-            self._bytes = 0
+            for part in self._parts.values():
+                part.blocks.clear()
+                part.nbytes = 0
+            self._where.clear()
 
     @property
     def nbytes(self) -> int:
-        """Total bytes currently cached."""
+        """Total bytes currently cached across all partitions."""
         with self._lock:
-            return self._bytes
+            return sum(p.nbytes for p in self._parts.values())
 
     def __len__(self) -> int:
         with self._lock:
-            return len(self._blocks)
+            return sum(len(p.blocks) for p in self._parts.values())
 
 
 class ReadExecutor:
@@ -345,7 +463,8 @@ class ReadExecutor:
                            hedge_after_s=self.hedge_after_s,
                            attempts=self.hedge_attempts)
 
-    def _decode_wire(self, store: Any, data: bytes, depth: int = 0) -> bytes:
+    def _decode_wire(self, store: Any, data: bytes, depth: int = 0,
+                     partition: Optional[str] = None) -> bytes:
         # unframe compressed part files here, off the wire: the cache (and
         # every consumer above) sees decoded bytes, while the store charged
         # bandwidth for the compressed size it actually moved. Delta frames
@@ -364,14 +483,15 @@ class ReadExecutor:
         data = decode_frame(
             data,
             base_fetch=lambda bk, bh: self._base_bytes(store, bk, bh,
-                                                       depth + 1))
+                                                       depth + 1, partition))
         self.stats.bump(frames_decoded=1, frame_bytes_wire=wire,
                         frame_bytes_decoded=len(data))
         return data
 
     def _base_bytes(self, store: Any, key: str,
                     content_hash: Optional[str] = None,
-                    depth: int = 1) -> bytes:
+                    depth: int = 1,
+                    partition: Optional[str] = None) -> bytes:
         # decoded bytes of a delta frame's base: content-hash-named cache
         # lookup first (shared with dedup'd reads of the base itself),
         # then a plain inline get + decode
@@ -379,47 +499,55 @@ class ReadExecutor:
         if self.cache.capacity:
             name = content_cache_key(content_hash) if content_hash else key
             ck = (_store_token(store), name)
-            hit = self.cache.get(ck)
+            hit = self.cache.get(ck, partition)
             if hit is not None:
                 self.stats.bump(cache_hits=1)
                 return hit
             self.stats.bump(cache_misses=1)
-        data = self._decode_wire(store, self._get_raw(store, key), depth)
+        data = self._decode_wire(store, self._get_raw(store, key), depth,
+                                 partition)
         if ck is not None:
-            self.cache.put(ck, data)
+            self.cache.put(ck, data, partition)
         return data
 
     def _fetch_miss(self, store: Any, key: str,
-                    cache_key: Optional[Tuple[int, str]]) -> bytes:
-        data = self._decode_wire(store, self._get_raw(store, key))
+                    cache_key: Optional[Tuple[int, str]],
+                    partition: Optional[str] = None) -> bytes:
+        data = self._decode_wire(store, self._get_raw(store, key),
+                                 partition=partition)
         if cache_key is not None:
-            self.cache.put(cache_key, data)
+            self.cache.put(cache_key, data, partition)
         return data
 
     # -- public fetch API ----------------------------------------------------
 
     def fetch(self, store: Any, key: str, *, cacheable: bool = True,
-              cache_name: Optional[str] = None) -> bytes:
+              cache_name: Optional[str] = None,
+              cache_partition: Optional[str] = None) -> bytes:
         """One object get through cache + pool + hedging.
 
         ``cache_name`` overrides the cache key (object key by default):
         content-addressed reads pass :func:`content_cache_key` of the
         block's hash so aliased paths share one cache entry.
+        ``cache_partition`` names the block-cache priority class the
+        fetched (or promoted) block lands in — see :class:`BlockCache`.
         """
         ck = ((_store_token(store), cache_name or key)
               if cacheable and self.cache.capacity else None)
         if ck is not None:
-            hit = self.cache.get(ck)
+            hit = self.cache.get(ck, cache_partition)
             if hit is not None:
                 self.stats.bump(cache_hits=1)
                 return hit
             self.stats.bump(cache_misses=1)
-        return self._io.submit(self._fetch_miss, store, key, ck).result()
+        return self._io.submit(self._fetch_miss, store, key, ck,
+                               cache_partition).result()
 
     def fetch_ordered(self, store: Any, keys: Sequence[str], *,
                       cacheable: bool = True,
                       window: Optional[int] = None,
                       cache_names: Optional[Sequence[Optional[str]]] = None,
+                      cache_partition: Optional[str] = None,
                       ) -> Iterator[bytes]:
         """Fetch ``keys`` concurrently, yield results in input order.
 
@@ -430,7 +558,8 @@ class ReadExecutor:
         it explicitly — the stream loader's backpressure rides on this.
         ``cache_names`` (aligned with ``keys``; None entries fall back to
         the object key) names cache entries by content hash, as in
-        :meth:`fetch`.
+        :meth:`fetch`. ``cache_partition`` routes every fetched block
+        into that priority class of the block cache.
         """
         keys = list(keys)
         names: List[Optional[str]] = (list(cache_names) if cache_names
@@ -447,14 +576,15 @@ class ReadExecutor:
             ck = ((_store_token(store), names[i] or key)
                   if cacheable and self.cache.capacity else None)
             if ck is not None:
-                hit = self.cache.get(ck)
+                hit = self.cache.get(ck, cache_partition)
                 if hit is not None:
                     self.stats.bump(cache_hits=1)
                     f: Future = Future()
                     f.set_result(hit)
                     return f
                 self.stats.bump(cache_misses=1)
-            return self._io.submit(self._fetch_miss, store, key, ck)
+            return self._io.submit(self._fetch_miss, store, key, ck,
+                                   cache_partition)
 
         try:
             for i in range(min(window, len(keys))):

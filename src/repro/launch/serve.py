@@ -5,7 +5,10 @@
 
 Loads params from the latest delta-lake checkpoint when one exists
 (elastic: any mesh/host count can restore), else serves fresh-initialized
-weights (layout/perf testing).
+weights (layout/perf testing). With ``--weights-dir`` the params come
+from a serve-weights store instead, through the snapshot-pinned
+``store.models(prefix)`` handle (one merged cold-start fetch plan); the
+engine owns that handle and releases its lease on close.
 """
 
 from __future__ import annotations
@@ -35,6 +38,12 @@ def main() -> None:
                     help="after the restore completes, prune checkpoints "
                          "beyond the newest N and vacuum the reclaimed "
                          "bytes")
+    ap.add_argument("--weights-dir", default=None,
+                    help="serve-weights store directory; loads params via "
+                         "store.models(--weights-prefix) instead of a "
+                         "checkpoint")
+    ap.add_argument("--weights-prefix", default="serve_weights",
+                    help="model prefix inside --weights-dir")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
@@ -49,7 +58,22 @@ def main() -> None:
         raise SystemExit(f"{cfg.name}: no decode step")
 
     params = transformer.init_params(cfg, jax.random.key(args.seed))
-    if args.ckpt_dir:
+    repo = None
+    if args.weights_dir:
+        from ..core import DeltaTensorStore
+        wstore = DeltaTensorStore(LocalFSObjectStore(args.weights_dir),
+                                  "weights")
+        repo = wstore.models(args.weights_prefix)
+        if repo.exists():
+            params = repo.load(params)
+            print(f"[serve] loaded {repo.stats()['leaves']} param leaves "
+                  f"from {args.weights_dir!r} prefix "
+                  f"{args.weights_prefix!r} @ v{repo.version}")
+        else:
+            repo.save(params)
+            print(f"[serve] seeded fresh weights into {args.weights_dir!r} "
+                  f"prefix {args.weights_prefix!r}")
+    elif args.ckpt_dir:
         ckpt = ckpt_mod.DeltaCheckpointer(LocalFSObjectStore(args.ckpt_dir),
                                           shards=args.ckpt_shards)
         if ckpt.restore_available():
@@ -68,23 +92,22 @@ def main() -> None:
     if cfg.family == "vlm":
         extra["image_embeds"] = jax.numpy.zeros(
             (args.slots, cfg.n_image_tokens, cfg.d_model), jax.numpy.float32)
-    eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                      extra_inputs=extra)
-
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        (int(rng.integers(4, 24)),)).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    for r in reqs:
-        eng.submit(r)
-    t0 = time.time()
-    eng.run_until_drained()
-    dt = time.time() - t0
-    tok = sum(len(r.out_tokens) for r in reqs)
-    print(f"[serve] {len(reqs)} requests, {tok} tokens, {dt:.2f}s "
-          f"({tok/dt:.1f} tok/s) on {args.slots} slots")
+    with ServeEngine(params, cfg, n_slots=args.slots, max_len=args.max_len,
+                     extra_inputs=extra, repo=repo) as eng:
+        rng = np.random.default_rng(args.seed)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            (int(rng.integers(4, 24)),)).astype(np.int32),
+                        max_new_tokens=args.max_new)
+                for i in range(args.requests)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.time()
+        eng.run_until_drained()
+        dt = time.time() - t0
+        tok = sum(len(r.out_tokens) for r in reqs)
+        print(f"[serve] {len(reqs)} requests, {tok} tokens, {dt:.2f}s "
+              f"({tok/dt:.1f} tok/s) on {args.slots} slots")
 
 
 if __name__ == "__main__":

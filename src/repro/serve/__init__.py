@@ -1,3 +1,24 @@
-from .engine import Request, ServeEngine, load_weights, save_weights
+"""Serving layer: weight handles, the inference engine, and the gateway.
 
-__all__ = ["Request", "ServeEngine", "load_weights", "save_weights"]
+``repo.ModelRepo`` (via ``store.models(prefix)``) is the weights API,
+``engine.ServeEngine`` runs continuous-batching inference, and
+``gateway.Gateway`` is the multi-tenant admission/scheduling layer in
+front of the store. ``save_weights`` / ``load_weights`` are deprecated
+shims kept for existing callers.
+"""
+
+from .engine import Request, ServeEngine, load_weights, save_weights
+from .gateway import Gateway, RetryAfter, TenantPolicy, jain_index
+from .repo import ModelRepo
+
+__all__ = [
+    "Gateway",
+    "ModelRepo",
+    "Request",
+    "RetryAfter",
+    "ServeEngine",
+    "TenantPolicy",
+    "jain_index",
+    "load_weights",
+    "save_weights",
+]

@@ -5,18 +5,24 @@ and the engine immediately prefill-admits the next queued request into it.
 Per-slot KV caches live in one batched cache pytree, so decode is a single
 jit'd step for the whole batch regardless of request boundaries.
 
-Weights live in the Delta Tensor store as one FTSF tensor per param leaf;
-:func:`load_weights` pulls the whole tree through one merged
-``Catalog.read_many`` fetch plan on the shared
-:class:`~repro.lake.io.ReadExecutor` — deduplicated keys, windowed
-submission, per-leaf decode overlapping in-flight fetches — so cold-start
-weight load time is the makespan of parallel object-store gets, not the
-serial sum.
+Weights live in the Delta Tensor store as one FTSF tensor per param leaf,
+managed through :class:`~repro.serve.repo.ModelRepo`
+(``store.models(prefix)``): a snapshot-pinned, lease-holding handle whose
+``load`` pulls the whole tree through one merged ``Catalog.read_many``
+fetch plan on the shared :class:`~repro.lake.io.ReadExecutor` —
+deduplicated keys, windowed submission, per-leaf decode overlapping
+in-flight fetches — so cold-start weight load time is the makespan of
+parallel object-store gets, not the serial sum. The old free functions
+:func:`save_weights` / :func:`load_weights` survive as deprecated shims
+over that handle. Multi-tenant admission control lives one layer up in
+:class:`~repro.serve.gateway.Gateway`.
 """
 
 from __future__ import annotations
 
 import queue
+import warnings
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -28,51 +34,42 @@ from ..core.store import DeltaTensorStore
 from ..lake.io import ReadExecutor
 from ..models import transformer
 from ..models.config import ArchConfig
+from .repo import ModelRepo
 
 
-# -- weight load/store -------------------------------------------------------
-
-from ..dist.sharding import _path_str as _leaf_name
+# -- weight load/store (deprecated shims over ModelRepo) ----------------------
 
 
 def save_weights(store: DeltaTensorStore, params: Any, *,
                  prefix: str = "serve_weights") -> List[str]:
-    """Persist a param pytree: one FTSF tensor per leaf, one atomic commit.
+    """Deprecated: use ``store.models(prefix).save(params)``.
 
-    One :class:`~repro.core.batch.WriteBatch` holds the whole generation;
-    re-saving under the same prefix atomically replaces the previous one
-    (old files are removed in the same commit — a reader never sees two
-    generations of one leaf).
+    Thin shim over :meth:`repro.serve.repo.ModelRepo.save` — identical
+    behavior (one FTSF tensor per leaf, ONE atomic commit, re-save
+    replaces the previous generation), kept for existing callers.
     """
-    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
-    with store.batch(op=f"SAVE WEIGHTS {prefix}") as batch:
-        tids = [batch.put(np.asarray(leaf), tensor_id=f"{prefix}/{_leaf_name(path)}",
-                          layout="ftsf", overwrite=True)
-                for path, leaf in leaves]
-    return tids
+    warnings.warn(
+        "save_weights is deprecated; use store.models(prefix).save(params)",
+        DeprecationWarning, stacklevel=2)
+    with store.models(prefix) as repo:
+        return repo.save(params)
 
 
 def load_weights(store: DeltaTensorStore, template: Any, *,
                  prefix: str = "serve_weights",
                  io: Optional[ReadExecutor] = None) -> Any:
-    """Load a param pytree saved by :func:`save_weights`.
+    """Deprecated: use ``store.models(prefix).load(template)``.
 
-    ``template`` (e.g. ``jax.eval_shape`` of ``init_params``, or a real
-    params pytree) supplies the tree structure and leaf dtypes. The whole
-    tree loads through ONE merged fetch plan
-    (:meth:`~repro.core.catalog.Catalog.read_many`) against one pinned
-    catalog — a consistent weight generation even if a re-save lands
-    mid-load, with any chunk file shared across leaves fetched once and
-    each leaf decoding as soon as its last file arrives.
+    Thin shim over :meth:`repro.serve.repo.ModelRepo.load` — identical
+    behavior (whole tree through ONE merged fetch plan against one pinned
+    catalog). ``io=`` now actually threads through to ``read_many``
+    (historically it was accepted and silently ignored).
     """
-    io = io or store.io
-    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    catalog = store.catalog()
-    arrays = catalog.read_many(
-        [(f"{prefix}/{_leaf_name(p)}", None) for p, _ in flat])
-    out = [arr.astype(np.dtype(leaf.dtype), copy=False)
-           for arr, (_, leaf) in zip(arrays, flat)]
-    return jax.tree_util.tree_unflatten(treedef, out)
+    warnings.warn(
+        "load_weights is deprecated; use store.models(prefix).load(template)",
+        DeprecationWarning, stacklevel=2)
+    with store.models(prefix) as repo:
+        return repo.load(template, io=io)
 
 
 @dataclass
@@ -86,9 +83,18 @@ class Request:
 
 
 class ServeEngine:
+    """Continuous-batching inference engine over store-resident weights.
+
+    ``close()`` / context-manager exit / garbage collection release the
+    engine's resources — in particular the snapshot lease of a weight
+    repo passed as ``repo=`` (or via :meth:`from_repo`), which the engine
+    then owns. Same lifecycle contract as ``TensorRef``, ``StreamLoader``,
+    ``ModelRepo``, and ``Gateway``.
+    """
+
     def __init__(self, params, cfg: ArchConfig, *, n_slots: int, max_len: int,
                  extra_inputs: Optional[Dict[str, Any]] = None,
-                 enc_len: int = 1):
+                 enc_len: int = 1, repo: Optional[ModelRepo] = None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -100,6 +106,11 @@ class ServeEngine:
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_len = np.zeros(n_slots, np.int32)
         self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._repo = repo
+        # GC backstop: a dropped engine must not pin its weight snapshot
+        self._finalizer = (weakref.finalize(self, repo.close)
+                           if repo is not None
+                           else weakref.finalize(self, lambda: None))
 
         self._decode = jax.jit(
             lambda params, tok, caches, extra: transformer.decode_step(
@@ -110,9 +121,46 @@ class ServeEngine:
                 params, cfg, tok, caches, **extra),
             static_argnames=())
 
+    # -- lifecycle -------------------------------------------------------------
+
+    @classmethod
+    def from_repo(cls, repo: ModelRepo, template: Any, cfg: ArchConfig, *,
+                  n_slots: int, max_len: int, **kwargs) -> "ServeEngine":
+        """Build an engine whose weights load from ``repo`` (one merged
+        fetch plan); the engine owns the handle and releases its snapshot
+        lease on ``close()``."""
+        params = repo.load(template)
+        return cls(params, cfg, n_slots=n_slots, max_len=max_len,
+                   repo=repo, **kwargs)
+
+    def close(self) -> None:
+        """Release engine resources (idempotent): drop queued and in-slot
+        requests and release the owned weight repo's snapshot lease."""
+        self.slot_req = [None] * self.n_slots
+        self.slot_len[:] = 0
+        while not self.queue.empty():
+            try:
+                self.queue.get_nowait()
+            except queue.Empty:  # pragma: no cover - racing drain
+                break
+        self._finalizer()
+
+    @property
+    def closed(self) -> bool:
+        """Whether :meth:`close` has run (weight snapshot lease released)."""
+        return not self._finalizer.alive
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     # -- slot management -----------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if self.closed:
+            raise RuntimeError("engine is closed")
         self.queue.put(req)
 
     def _admit(self) -> None:

@@ -1,8 +1,8 @@
-"""Docs drift gate: ARCHITECTURE.md must cover every core/lake module.
+"""Docs drift gate: ARCHITECTURE.md must cover every core/lake/serve module.
 
 CI runs this so the documentation layer cannot silently rot as the code
-grows: adding a public module under ``src/repro/core`` or
-``src/repro/lake`` without mentioning its path in the module index of
+grows: adding a public module under ``src/repro/core``, ``src/repro/lake``
+or ``src/repro/serve`` without mentioning its path in the module index of
 ``docs/ARCHITECTURE.md`` fails the build, as does a README link to a
 ``docs/*.md`` file that does not exist.
 
@@ -16,7 +16,7 @@ import re
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-COVERED_PACKAGES = ("src/repro/core", "src/repro/lake")
+COVERED_PACKAGES = ("src/repro/core", "src/repro/lake", "src/repro/serve")
 
 
 def public_modules() -> list:
@@ -59,7 +59,7 @@ def main() -> int:
             print(f"FAIL: {f}", file=sys.stderr)
         print(f"\n{len(failures)} docs check(s) failed", file=sys.stderr)
         return 1
-    print(f"OK: {len(public_modules())} core/lake modules covered by "
+    print(f"OK: {len(public_modules())} core/lake/serve modules covered by "
           f"docs/ARCHITECTURE.md; README doc links resolve")
     return 0
 
