@@ -88,9 +88,13 @@ def one_codec(x: np.ndarray, spec):
             t0 = time.perf_counter()
             got = store.get("t")
             cpu = time.perf_counter() - t0
-            total = cpu + lm.elapsed_s
+            # pure-wire makespan: decode seconds are already in the wall
+            # cpu term, and the staged read path charges them into
+            # elapsed_s too (the pipelined makespan) — cpu + elapsed_s
+            # would count decode twice
+            total = cpu + lm.io_elapsed_s
             if best is None or total < best["total_s"]:
-                best = {"cpu_s": cpu, "io_s": lm.elapsed_s, "total_s": total,
+                best = {"cpu_s": cpu, "io_s": lm.io_elapsed_s, "total_s": total,
                         "requests": lm.requests, "bytes_moved": lm.bytes_moved}
         assert np.array_equal(got, x)
 

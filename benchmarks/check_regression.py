@@ -8,7 +8,11 @@ which fails (exit 1) when a gated metric regresses more than ``--tolerance``
 (default 20%) below its committed baseline, or when any shard-scale
 configuration lost a write. Gated metrics:
 
-* ``BENCH_read_path.json``  — width-8 parallel ``get`` speedup over serial;
+* ``BENCH_read_path.json``  — width-8 parallel ``get`` speedup over serial,
+  plus the device-pipeline invariants: the cold compressed read-to-device
+  makespan stays <= 0.8x of un-pipelined fetch-then-decode, a positive
+  fraction of decode seconds hides under the wire, and the device slice
+  read stages only the wanted chunk bytes (no full-tensor host copy);
 * ``BENCH_shard_scale.json`` — 4-shard commit-throughput ratio vs 1 shard
   under 8 concurrent writers (the sharding scale-out claim), plus the
   zero-lost-writes invariant across every writer/shard configuration;
@@ -82,6 +86,7 @@ MIN_LOADER_VS_SERIAL_W8 = 2.0         # streaming loader throughput (acceptance)
 MAX_VARIANTS_VS_BASE = 2.5            # 8 variants' physical bytes vs base
 MIN_COALESCE_RATIO = 2.0              # uncoalesced/coalesced store requests
 MIN_SERVE_FAIRNESS = 0.80             # mid-run Jain index (acceptance)
+MAX_DEVICE_PIPELINE_RATIO = 0.8       # pipelined / fetch-then-decode (accept.)
 
 
 def _load(path: str) -> dict:
@@ -110,6 +115,32 @@ def main(argv=None) -> int:
               f"floor={floor:.3f}")
         if got < floor:
             failures.append(label)
+
+    rp = _load(os.path.join(args.fresh, "BENCH_read_path.json"))
+    dev = rp["device"]
+    dratio = float(dev["pipelined_vs_serial"])
+    doverlap = float(dev["decode_overlap_frac"])
+    dzero = bool(dev["slice"]["zero_full_tensor_host_copies"])
+    if dratio > MAX_DEVICE_PIPELINE_RATIO:
+        print(f"[REGRESSION] device pipelined read is {dratio:.2f}x "
+              f"fetch-then-decode > ceiling {MAX_DEVICE_PIPELINE_RATIO:.2f}x; "
+              f"decode no longer overlaps fetch")
+        failures.append("device pipeline ratio ceiling")
+    if doverlap <= 0.0:
+        print(f"[REGRESSION] decode_overlap_frac={doverlap:.3f}; no decode "
+              f"seconds hid under the wire")
+        failures.append("device decode overlap")
+    if not dzero:
+        print(f"[REGRESSION] device slice staged "
+              f"{dev['slice']['host_staged_bytes']} host bytes for a "
+              f"{dev['slice']['device_bytes']}-byte window "
+              f"(full tensor {dev['slice']['full_tensor_bytes']}); the "
+              f"zero-full-tensor-host-copy invariant broke")
+        failures.append("device slice zero-copy")
+    if dratio <= MAX_DEVICE_PIPELINE_RATIO and doverlap > 0.0 and dzero:
+        print(f"[OK] device pipeline: {dratio:.2f}x fetch-then-decode "
+              f"({doverlap:.0%} of decode hidden), slice staged only the "
+              f"wanted {dev['slice']['host_staged_bytes']} bytes")
 
     shard = _load(os.path.join(args.fresh, "BENCH_shard_scale.json"))
     for writers, per_shards in sorted(shard["writers"].items()):

@@ -41,7 +41,12 @@ def timed(lm: LatencyModel, fn: Callable, repeats: int = 1) -> OpCost:
         t0 = time.perf_counter()
         fn()
         cpu = time.perf_counter() - t0
-        cost = OpCost(cpu_s=cpu, io_s=lm.elapsed_s, bytes_moved=lm.bytes_moved)
+        # io_elapsed_s is the pure-wire makespan: decode seconds are
+        # already inside the wall-clock cpu term, and the staged read
+        # path also charges them into elapsed_s (the pipelined makespan),
+        # so summing cpu + elapsed_s would count decode twice
+        cost = OpCost(cpu_s=cpu, io_s=lm.io_elapsed_s,
+                      bytes_moved=lm.bytes_moved)
         if best is None or cost.total_s < best.total_s:
             best = cost
     return best

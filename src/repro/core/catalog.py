@@ -337,7 +337,8 @@ class Catalog:
     def read_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]],
                   *, window: Optional[int] = None,
                   io: Optional["ReadExecutor"] = None,
-                  cache_partition: Optional[str] = None) -> List[np.ndarray]:
+                  cache_partition: Optional[str] = None,
+                  device: bool = False) -> List[np.ndarray]:
         """Read many tensors/slices through one merged fetch plan.
 
         The plan's unique keys stream through the shared executor's
@@ -357,6 +358,10 @@ class Catalog:
         the store's shared executor (width sweeps, a caller-owned pool);
         ``cache_partition`` routes fetched blocks into that block-cache
         priority class (the gateway pins hot base-model weights this way).
+        ``device=True`` finishes each request through the codec's
+        ``decode_device`` path (see :meth:`TensorRef.read_device`), so
+        results are jax device buffers assembled without an ordered
+        full-tensor host copy.
         """
         io = io or self._store.io
         plan = self.plan_many(requests, io=io)
@@ -374,8 +379,14 @@ class Catalog:
             r = plan.requests[i]
             groups = [self.header(r.tid)]
             groups.extend(received[i][k] for k in r.keys)  # request's order
-            results[i] = (r.codec.decode(groups) if r.spec is None
-                          else r.codec.decode_slice(groups, r.spec))
+            if device:
+                out, info = r.codec.decode_device(groups, r.spec)
+                if info.on_device:
+                    io.stats.bump(bytes_to_device=info.device_bytes)
+                results[i] = out
+            else:
+                results[i] = (r.codec.decode(groups) if r.spec is None
+                              else r.codec.decode_slice(groups, r.spec))
             received[i].clear()
 
         lease = self._store.leases.acquire(self.version_vector)
@@ -573,6 +584,38 @@ class TensorRef:
         spec = normalize_slices(self.shape, [_as_spec_item(s) for s in slices])
         filters = codec.slice_filters(self.header, spec)
         return codec.decode_slice(self._groups(filters or None), spec)
+
+    def read_device(self, slices: Optional[Sequence] = None, *,
+                    with_info: bool = False,
+                    use_pallas: Optional[bool] = None):
+        """Read straight into a jax device buffer (numpy when jax can't).
+
+        FTSF reads stage chunk payloads once and reorder on the device via
+        ``block_gather``; COO reads scatter sparse pairs on the device via
+        ``coo_scatter`` — neither materializes an ordered full tensor on
+        the host. Other layouts (and dtypes jax cannot hold bit-exactly,
+        e.g. float64 without ``jax_enable_x64``) take the documented
+        host-decode fallback. ``slices`` matches :meth:`read_slice`;
+        ``with_info=True`` additionally returns the
+        :class:`~repro.lake.device.DeviceReadInfo` accounting.
+        """
+        codec = self.codec
+        if slices is None:
+            out, info = codec.decode_device(self._groups(),
+                                            use_pallas=use_pallas)
+        else:
+            if not codec.supports_slice:
+                raise NotImplementedError(
+                    f"layout {self.layout!r} does not support slice reads")
+            spec = normalize_slices(self.shape,
+                                    [_as_spec_item(s) for s in slices])
+            filters = codec.slice_filters(self.header, spec)
+            out, info = codec.decode_device(self._groups(filters or None),
+                                            spec, use_pallas=use_pallas)
+        if info.on_device:
+            self._catalog._store.io.stats.bump(
+                bytes_to_device=info.device_bytes)
+        return (out, info) if with_info else out
 
     def __getitem__(self, item: Any) -> np.ndarray:
         """Numpy-style lazy slicing: ints, contiguous slices, Ellipsis.

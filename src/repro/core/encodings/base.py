@@ -195,6 +195,28 @@ class Codec:
         """Decode only the ``spec`` window from (pruned) row groups."""
         raise NotImplementedError
 
+    def decode_device(self, groups: List[Dict[str, Any]],
+                      spec: Optional[SliceSpec] = None, *,
+                      use_pallas: Optional[bool] = None):
+        """Decode onto an accelerator device: ``(array, DeviceReadInfo)``.
+
+        The base implementation is the documented fallback — host decode
+        followed by one transfer (or no transfer at all when jax is absent
+        or the dtype cannot be held bit-exactly; see
+        :mod:`repro.lake.device`). FTSF and COO override this with true
+        device assembly that never materializes an ordered full host
+        tensor.
+        """
+        from ...lake import device as lake_device
+        arr = self.decode(groups) if spec is None else self.decode_slice(
+            groups, spec)
+        out = lake_device.to_device(arr)
+        info = lake_device.DeviceReadInfo(
+            path="host_fallback", host_staged_bytes=int(arr.nbytes),
+            device_bytes=int(arr.nbytes),
+            on_device=lake_device.is_device_array(out))
+        return out, info
+
 
 def as_dense(tensor: Any) -> np.ndarray:
     """Coerce ndarray-or-SparseCOO to a dense ndarray."""

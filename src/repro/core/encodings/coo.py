@@ -88,5 +88,32 @@ class COOCodec(Codec):
         t = self._coo(groups)
         return t.slice(normalize_slices(t.shape, spec)).to_dense()
 
+    def decode_device(self, groups: List[Dict[str, Any]],
+                      spec: SliceSpec = None, *, use_pallas=None):
+        """COO rows -> dense device tensor; the dense array never exists
+        on the host. Only the (nnz, ndim) indices and (nnz,) values are
+        staged; the ``coo_scatter`` kernel materializes the zeros-filled
+        dense buffer directly on the device.
+        """
+        from ...lake import device as lake_device
+        t = self._coo(groups)
+        if spec is not None:
+            t = t.slice(normalize_slices(t.shape, spec))
+        size = int(np.prod(t.shape)) if t.ndim else 1
+        if t.nnz and t.ndim:
+            flat = np.ravel_multi_index(tuple(t.indices.T), t.shape)
+        else:
+            flat = np.zeros(0, dtype=np.int64)
+        values = np.asarray(t.values)
+        out = lake_device.scatter_coo(flat, values, size,
+                                      use_pallas=use_pallas)
+        out = out.reshape(t.shape)
+        info = lake_device.DeviceReadInfo(
+            path="coo_scatter",
+            host_staged_bytes=int(t.indices.nbytes + values.nbytes),
+            device_bytes=size * values.dtype.itemsize,
+            on_device=lake_device.is_device_array(out))
+        return out, info
+
 
 register(COOCodec())

@@ -129,5 +129,53 @@ class FTSFCodec(Codec):
         trailing = tuple(slice(lo, hi) for lo, hi in spec[n_lead:])
         return out[(Ellipsis,) + trailing] if trailing else out
 
+    def decode_device(self, groups: List[Dict[str, Any]],
+                      spec: SliceSpec = None, *, use_pallas=None):
+        """Chunk rows -> device tensor without an ordered host copy.
+
+        Chunk payloads are staged into a preallocated buffer in **arrival
+        order** (one memoryview write per chunk — the only host copy),
+        then the whole buffer moves to the device once and the
+        ``block_gather`` kernel permutes rows into ``chunk_index`` order
+        there. Sub-chunk (trailing-dim) crops happen on the device view.
+        """
+        from ...lake import device as lake_device
+        shape, chunk_dims, dtype, groups = self._meta(groups)
+        n = len(shape)
+        spec = normalize_slices(shape, spec)
+        lead = shape[: n - chunk_dims]
+        n_lead = len(lead)
+        lead_spec = spec[:n_lead]
+        out_lead = slice_shape(lead_spec)
+        chunk_shape = shape[n - chunk_dims:]
+        chunk_elems = int(np.prod(chunk_shape)) if chunk_dims else 1
+        wanted: Dict[int, int] = {0: 0}
+        if n_lead:
+            grids = np.meshgrid(*[np.arange(lo, hi) for lo, hi in lead_spec],
+                                indexing="ij")
+            flat_idx = np.ravel_multi_index([g.ravel() for g in grids], lead)
+            wanted = {int(ci): pos for pos, ci in enumerate(flat_idx)}
+        asm = lake_device.ChunkAssembler(len(wanted), chunk_elems, dtype)
+        for g in groups:
+            for i, blob in zip(np.asarray(g["chunk_index"]), g["chunk"]):
+                pos = wanted.get(int(i))
+                if pos is not None:
+                    asm.add(pos, blob)
+        if asm.count != len(wanted):
+            raise ValueError(
+                f"decode_device: got {asm.count}/{len(wanted)} chunks")
+        rows = asm.gather(use_pallas=use_pallas)
+        out = rows.reshape(tuple(out_lead) + tuple(chunk_shape))
+        trailing = tuple(slice(lo, hi) for lo, hi in spec[n_lead:])
+        if any(sp != (0, d) for sp, d in zip(spec[n_lead:], chunk_shape)):
+            out = out[(Ellipsis,) + trailing]
+        on_dev = lake_device.is_device_array(out)
+        info = lake_device.DeviceReadInfo(
+            path="block_gather" if on_dev else "host_fallback",
+            host_staged_bytes=asm.staged_bytes,
+            device_bytes=int(np.prod(out.shape)) * np.dtype(dtype).itemsize,
+            on_device=on_dev)
+        return out, info
+
 
 register(FTSFCodec())

@@ -836,11 +836,21 @@ class DeltaTensorStore:
         with self.open(tid, version=version) as ref:
             return ref.read_slice(slices)
 
+    def get_device(self, tid: str,
+                   slices: Optional[Sequence[Optional[Tuple[int, int]]]] = None,
+                   *, version: VersionArg = None):
+        """Eager device read: the tensor (or leading-dims slice) as a jax
+        device buffer, assembled without an ordered full-tensor host copy
+        (see :meth:`~repro.core.catalog.TensorRef.read_device`)."""
+        with self.open(tid, version=version) as ref:
+            return ref.read_device(slices)
+
     def read_many(self, requests: Sequence[Tuple[str, Optional[Sequence]]], *,
                   version: VersionArg = None,
                   window: Optional[int] = None,
                   io: Optional[ReadExecutor] = None,
-                  cache_partition: Optional[str] = None) -> List[np.ndarray]:
+                  cache_partition: Optional[str] = None,
+                  device: bool = False) -> List[np.ndarray]:
         """Read many ``(tid, slices)`` requests through ONE merged fetch
         plan (see :meth:`~repro.core.catalog.Catalog.read_many`): shared
         chunk keys are fetched once, adjacent requests' files stream
@@ -848,10 +858,12 @@ class DeltaTensorStore:
         as its last file lands. ``slices=None`` reads a tensor in full.
         Results come back in request order, all pinned to one snapshot.
         ``io`` overrides the shared executor; ``cache_partition`` names
-        the block-cache priority class the fetched blocks land in.
+        the block-cache priority class the fetched blocks land in;
+        ``device=True`` assembles each result on the accelerator device.
         """
         return self.catalog(version).read_many(
-            requests, window=window, io=io, cache_partition=cache_partition)
+            requests, window=window, io=io, cache_partition=cache_partition,
+            device=device)
 
     def models(self, prefix: str, *, version: VersionArg = None):
         """A :class:`~repro.serve.repo.ModelRepo` handle over ``prefix``.
@@ -1007,6 +1019,8 @@ class DeltaTensorStore:
              "hedges_launched", "hedges_won",
              "plans", "plan_requests",          # read_many scheduling
              "plan_keys_fetched", "plan_keys_deduped",
+             "decode_s", "decode_overlap_frac", # staged frame decode
+             "decodes_offloaded", "bytes_to_device",
              "latency": {"count", "mean_s", "p50_s", "p95_s",
                          "p99_s", "max_s"}}
         """
@@ -1019,6 +1033,10 @@ class DeltaTensorStore:
                 "plan_keys_fetched": s.plan_keys_fetched,
                 "plan_keys_deduped": s.plan_keys_deduped,
                 "deltas_reconstructed": s.deltas_reconstructed,
+                "decode_s": s.decode_s,
+                "decode_overlap_frac": s.decode_overlap_frac,
+                "decodes_offloaded": s.decodes_offloaded,
+                "bytes_to_device": s.bytes_to_device,
                 "latency": s.latency.summary()}
 
     def version(self) -> Union[int, Tuple[int, ...]]:

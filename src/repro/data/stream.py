@@ -60,7 +60,10 @@ class StreamLoader:
     sample subset ``h::H`` of the global id space.
 
     ``window`` bounds in-flight prefetched batches (and so prefetch
-    memory: ``window × batch_size × row_nbytes``). ``epochs=None``
+    memory: ``window × batch_size × row_nbytes``). ``device=True`` yields
+    each batch as a jax device array (one transfer per batch off the
+    reorder staging buffer; numpy when jax is absent or the dtype cannot
+    be held bit-exactly — see :mod:`repro.lake.device`). ``epochs=None``
     streams forever. ``clock`` (default ``time.perf_counter``) timestamps
     per-batch fetch latency — benchmarks pass the virtual clock of a
     modeled store. ``close()`` releases the snapshot lease; the loader is
@@ -78,8 +81,10 @@ class StreamLoader:
                  hedge_after_s: Optional[float] = None,
                  io: Optional[ReadExecutor] = None,
                  read_window: Optional[int] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 device: bool = False):
         self.store = store
+        self.device = bool(device)
         self.tensor_ids: List[str] = (
             [tensors] if isinstance(tensors, str) else list(tensors))
         if not self.tensor_ids:
@@ -234,6 +239,14 @@ class StreamLoader:
         out = np.empty((len(rows),) + self.row_shape, self.dtype)
         for arr, pos in zip(arrays, placements):
             out[pos] = arr
+        if self.device:
+            # one staging buffer (needed anyway for the shuffle reorder),
+            # one transfer: the batch first exists ordered on the device
+            from ..lake import device as lake_device
+            dev = lake_device.to_device(out)
+            if lake_device.is_device_array(dev):
+                self.io.stats.bump(bytes_to_device=int(out.nbytes))
+            return dev, self.clock()
         return out, self.clock()
 
     # -- streaming -------------------------------------------------------------

@@ -12,17 +12,20 @@ the result, so callers never see the alignment constraints.
 from __future__ import annotations
 
 import math
+import os
 from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .block_gather import block_gather as _pl_block_gather
 from .block_norms import block_norms as _pl_block_norms
 from .block_scatter import block_scatter as _pl_block_scatter
 from .coo_scatter import coo_scatter as _pl_coo_scatter
+from .unshuffle import byte_unshuffle_planes as _pl_unshuffle
 
 
 def _on_tpu() -> bool:
@@ -30,9 +33,14 @@ def _on_tpu() -> bool:
 
 
 def _decide(use_pallas: Optional[bool]) -> Tuple[bool, bool]:
-    """-> (use_pallas, interpret)"""
+    """-> (use_pallas, interpret)
+
+    REPRO_FORCE_PALLAS_INTERPRET=1 makes the default dispatch run every
+    kernel body through the Pallas interpreter — the CI leg that exercises
+    the kernels on CPU-only runners.
+    """
     if use_pallas is None:
-        use_pallas = _on_tpu()
+        use_pallas = _on_tpu() or bool(os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"))
     return use_pallas, not _on_tpu()
 
 
@@ -90,6 +98,47 @@ def coo_scatter(flat_idx: jax.Array, values: jax.Array, size: int,
                               interpret=interpret)
         return out[:size]
     return ref.coo_scatter(flat_idx, values, size)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def unshuffle(planes: jax.Array, use_pallas: Optional[bool] = None) -> jax.Array:
+    """Byte-plane transpose: (itemsize, n) uint8 planes -> (n, itemsize)."""
+    pallas, interpret = _decide(use_pallas)
+    if pallas:
+        itemsize, n = planes.shape
+        tile = 512
+        pad = (-n) % tile
+        pp = jnp.pad(planes, ((0, 0), (0, pad))) if pad else planes
+        return _pl_unshuffle(pp, tile=tile, interpret=interpret)[:n]
+    return ref.unshuffle(planes)
+
+
+def unshuffle_host(planes: np.ndarray, *,
+                   use_pallas: Optional[bool] = None) -> np.ndarray:
+    """Host-buffer entry point with the ``compression.set_unshuffle_kernel``
+    signature: numpy (itemsize, n) uint8 planes in, numpy (n, itemsize) out."""
+    return np.asarray(unshuffle(jnp.asarray(planes), use_pallas=use_pallas))
+
+
+def block_gather_host(x: np.ndarray, ids: np.ndarray,
+                      block_shape: Tuple[int, int], *,
+                      use_pallas: Optional[bool] = None) -> jax.Array:
+    """Host-buffer entry point: numpy operand/ids in, device tiles out.
+
+    This is the lake's device-read doorway (``lake/device.py``): the staged
+    chunk buffer never round-trips through a host-side gather.
+    """
+    return block_gather(jnp.asarray(x), jnp.asarray(ids, dtype=jnp.int32),
+                        tuple(block_shape), use_pallas=use_pallas)
+
+
+def coo_scatter_host(flat_idx: np.ndarray, values: np.ndarray, size: int, *,
+                     use_pallas: Optional[bool] = None) -> jax.Array:
+    """Host-buffer entry point: COO pairs in, dense device buffer out."""
+    if len(flat_idx) == 0:
+        return jnp.zeros((int(size),), dtype=values.dtype)
+    return coo_scatter(jnp.asarray(flat_idx, dtype=jnp.int32),
+                       jnp.asarray(values), int(size), use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("block_shape", "k", "use_pallas"))

@@ -59,6 +59,11 @@ def coo_scatter(flat_idx: jax.Array, values: jax.Array, size: int) -> jax.Array:
     return out.at[flat_idx].add(values, mode="drop")
 
 
+def unshuffle(planes: jax.Array) -> jax.Array:
+    """Byte-plane transpose: (itemsize, n) uint8 planes -> (n, itemsize)."""
+    return planes.T
+
+
 def block_topk(x: jax.Array, block_shape: Tuple[int, int], k: int):
     """Top-k blocks by energy: (ids, blocks) — the gradient-compression path."""
     bh, bw = block_shape

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: byte-unshuffle — the (itemsize, n) byte-plane transpose.
+
+Frame decode hot loop: a shuffled chunk blob stores the i-th byte of every
+item contiguously (``[b0 b0 ...][b1 b1 ...]``, the HDF5/Blosc filter that
+makes float exponent bytes compressible); decode must transpose the planes
+back to interleaved items. The numpy path in
+``repro.lake.compression.byte_unshuffle`` pays a strided host transpose per
+chunk; this kernel does the same transpose on-device, one column tile per
+grid step, so decode bandwidth rides VMEM instead of the host memory bus.
+
+Layout: input is the ``(itemsize, n_items)`` uint8 plane matrix, output the
+``(n_items, itemsize)`` item matrix (flattening it row-major yields the raw
+buffer). Each grid step moves one ``(itemsize, tile)`` slab of planes into
+VMEM and writes it back transposed as ``(tile, itemsize)`` — itemsize is
+tiny (2..16 for real dtypes), so a 512-column tile keeps the working set at
+a few KiB while the lane dimension stays wide. Callers pad ``n_items`` to a
+tile multiple and crop (see ``ops.unshuffle``).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _unshuffle_kernel(x_ref, o_ref):
+    # (itemsize, tile) byte planes in, (tile, itemsize) items out
+    o_ref[...] = x_ref[...].T
+
+
+def byte_unshuffle_planes(planes: jax.Array, *, tile: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """planes: (itemsize, n) uint8 with n % tile == 0 -> (n, itemsize)."""
+    itemsize, n = planes.shape
+    assert n % tile == 0, (planes.shape, tile)
+    return pl.pallas_call(
+        _unshuffle_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((itemsize, tile), lambda t: (0, t))],
+        out_specs=pl.BlockSpec((tile, itemsize), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, itemsize), planes.dtype),
+        interpret=interpret,
+    )(planes)

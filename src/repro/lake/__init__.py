@@ -5,21 +5,24 @@ from .log import (CommitConflict, DeltaLog, Snapshot, catalog_index_key,
 from .compression import (CompressionSpec, UnknownCodecError, available_codecs,
                           byte_shuffle, byte_unshuffle, decode_frame,
                           encode_frame, frame_info, parse_compression,
-                          register_compressor)
+                          register_compressor, set_unshuffle_kernel)
 from .io import (BlockCache, ReadExecutor, ReadStats, get_default_executor,
                  set_default_executor)
 from .table import (CompactResult, DeltaTable, UploadGuard, VacuumResult,
                     file_overlaps)
 from . import columnar
+from . import device
+from .device import ChunkAssembler, DeviceReadInfo, to_device
 
 __all__ = [
     "InMemoryObjectStore", "LatencyModel", "LocalFSObjectStore", "ObjectStore",
     "ObjectNotFoundError", "PutIfAbsentError", "CommitConflict", "DeltaLog",
-    "Snapshot", "DeltaTable", "file_overlaps", "columnar",
+    "Snapshot", "DeltaTable", "file_overlaps", "columnar", "device",
     "BlockCache", "ReadExecutor", "ReadStats", "get_default_executor",
     "set_default_executor", "CompactResult", "VacuumResult", "UploadGuard",
     "catalog_index_key", "catalog_index_version",
     "CompressionSpec", "UnknownCodecError", "available_codecs",
     "byte_shuffle", "byte_unshuffle", "decode_frame", "encode_frame",
     "frame_info", "parse_compression", "register_compressor",
+    "set_unshuffle_kernel", "ChunkAssembler", "DeviceReadInfo", "to_device",
 ]

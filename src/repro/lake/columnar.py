@@ -222,7 +222,7 @@ def _decode_column(raw: bytes, meta: Dict[str, Any]) -> Any:
         return _decode_array(raw, meta)
     if kind == "str":
         (ulen,) = struct.unpack_from("<Q", raw, 0)
-        udata = raw[8:8 + ulen].decode("utf-8")
+        udata = bytes(raw[8:8 + ulen]).decode("utf-8")
         uniques = np.asarray(udata.split("\x00"), dtype=object) if ulen else np.asarray([""], dtype=object)
         codes = _decode_array(raw[8 + ulen:], meta["code_meta"])
         return uniques[codes]
@@ -284,7 +284,9 @@ def _header(data: bytes) -> Tuple[Dict[str, Any], int]:
     if data[:4] != MAGIC:
         raise ValueError("not a parq-lite file")
     (hlen,) = struct.unpack_from("<I", data, 4)
-    header = json.loads(data[8:8 + hlen])
+    # bytes(): json.loads rejects memoryviews, which the zero-copy frame
+    # decode path now hands us
+    header = json.loads(bytes(data[8:8 + hlen]))
     return header, 8 + hlen
 
 

@@ -63,6 +63,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+# Byte buffers on the decode path are bytes on the wire but memoryviews once
+# zero-copy filters have run; every consumer accepts either.
+Buffer = Union[bytes, bytearray, memoryview]
+
 FRAME_MAGIC = b"PQZ1"
 
 SHUFFLE_SUFFIX = "+shuffle"
@@ -171,42 +175,78 @@ except ImportError:  # pragma: no cover - container lacks lz4
 
 # -- byte shuffle ------------------------------------------------------------
 
+# Optional accelerator for the unshuffle transpose (decode hot path). The
+# hook takes the (itemsize, n) uint8 plane matrix and returns the
+# (n, itemsize) item matrix as anything np.asarray accepts — installed from
+# repro.kernels (Pallas) on TPU hosts, absent everywhere else so the lake
+# never imports jax just to decode.
+_UNSHUFFLE_KERNEL: Optional[Callable[[np.ndarray], np.ndarray]] = None
 
-def byte_shuffle(raw: bytes, itemsize: int) -> bytes:
+
+def set_unshuffle_kernel(fn: Optional[Callable[[np.ndarray], np.ndarray]]) -> None:
+    """Install (or clear, with None) the unshuffle plane-transpose kernel."""
+    global _UNSHUFFLE_KERNEL
+    _UNSHUFFLE_KERNEL = fn
+
+
+def get_unshuffle_kernel() -> Optional[Callable[[np.ndarray], np.ndarray]]:
+    return _UNSHUFFLE_KERNEL
+
+
+def byte_shuffle(raw: Buffer, itemsize: int) -> Buffer:
     """Transpose ``raw`` viewed as ``(n, itemsize)`` bytes to group the
     i-th byte of every item together (HDF5/Blosc shuffle filter).
 
     A trailing remainder shorter than ``itemsize`` is appended unshuffled,
     so any buffer length round-trips. ``itemsize <= 1`` is the identity.
+    Returns a memoryview over a single freshly-written buffer — one copy
+    total, no intermediate ``bytes`` materialization.
     """
     itemsize = int(itemsize)
     if itemsize <= 1 or len(raw) < 2 * itemsize:
         return raw
     a = np.frombuffer(raw, dtype=np.uint8)
     n = (len(a) // itemsize) * itemsize
-    body = np.ascontiguousarray(a[:n].reshape(-1, itemsize).T).reshape(-1)
-    return body.tobytes() + a[n:].tobytes()
+    out = np.empty(len(a), dtype=np.uint8)
+    out[:n].reshape(itemsize, -1)[...] = a[:n].reshape(-1, itemsize).T
+    out[n:] = a[n:]
+    return out.data
 
 
-def byte_unshuffle(raw: bytes, itemsize: int) -> bytes:
-    """Exact inverse of :func:`byte_shuffle` for the same ``itemsize``."""
+def byte_unshuffle(raw: Buffer, itemsize: int) -> Buffer:
+    """Exact inverse of :func:`byte_shuffle` for the same ``itemsize``.
+
+    Decode hot path: the plane transpose lands directly in one output
+    buffer (returned as a memoryview — zero-copy for downstream
+    ``np.frombuffer`` consumers). When an accelerator kernel is installed
+    via :func:`set_unshuffle_kernel` the transpose runs there instead of
+    numpy.
+    """
     itemsize = int(itemsize)
     if itemsize <= 1 or len(raw) < 2 * itemsize:
         return raw
     a = np.frombuffer(raw, dtype=np.uint8)
     n = (len(a) // itemsize) * itemsize
-    body = np.ascontiguousarray(a[:n].reshape(itemsize, -1).T).reshape(-1)
-    return body.tobytes() + a[n:].tobytes()
+    out = np.empty(len(a), dtype=np.uint8)
+    planes = a[:n].reshape(itemsize, -1)
+    kern = _UNSHUFFLE_KERNEL
+    if kern is not None:
+        out[:n] = np.asarray(kern(planes), dtype=np.uint8).reshape(-1)
+    else:
+        out[:n].reshape(-1, itemsize)[...] = planes.T
+    out[n:] = a[n:]
+    return out.data
 
 
 # -- variant byte-delta ------------------------------------------------------
 
 
-def byte_delta(new: bytes, base: bytes) -> bytes:
+def byte_delta(new: Buffer, base: Buffer) -> Buffer:
     """XOR ``new`` against ``base`` byte-for-byte (TStore's variant trick).
 
     The output has ``len(new)`` exactly: the common prefix is XORed, any
-    tail of ``new`` past ``len(base)`` is appended verbatim. Because XOR
+    tail of ``new`` past ``len(base)`` is appended verbatim (written into
+    the same single output buffer, returned as a memoryview). Because XOR
     is an involution, :func:`byte_undelta` is this same operation — and a
     variant that differs from its base in a few percent of values deltas
     to mostly zero bytes, which any codec then crushes.
@@ -216,13 +256,13 @@ def byte_delta(new: bytes, base: bytes) -> bytes:
         return new
     a = np.frombuffer(new, dtype=np.uint8)
     b = np.frombuffer(base, dtype=np.uint8)
-    out = np.bitwise_xor(a[:n], b[:n])
-    if len(new) > n:
-        return out.tobytes() + new[n:]
-    return out.tobytes()
+    out = np.empty(len(a), dtype=np.uint8)
+    np.bitwise_xor(a[:n], b[:n], out=out[:n])
+    out[n:] = a[n:]
+    return out.data
 
 
-def byte_undelta(delta: bytes, base: bytes) -> bytes:
+def byte_undelta(delta: Buffer, base: Buffer) -> Buffer:
     """Exact inverse of :func:`byte_delta` given the same ``base``."""
     return byte_delta(delta, base)
 
@@ -344,18 +384,18 @@ def parse_compression(
 # -- frame format ------------------------------------------------------------
 
 
-def is_framed(data: bytes) -> bool:
+def is_framed(data: Buffer) -> bool:
     """True when ``data`` starts with the compression frame magic."""
     return data[:4] == FRAME_MAGIC
 
 
-def frame_info(data: bytes) -> Optional[Dict[str, Any]]:
+def frame_info(data: Buffer) -> Optional[Dict[str, Any]]:
     """The frame header dict (codec/shuffle/itemsize/raw_size) or None
     for unframed bytes — cheap introspection without decompressing."""
     if not is_framed(data):
         return None
     (hlen,) = struct.unpack_from("<I", data, 4)
-    return json.loads(data[8:8 + hlen])
+    return json.loads(bytes(data[8:8 + hlen]))
 
 
 def encode_frame(raw: bytes, spec: CompressionSpec, *, itemsize: int = 1,

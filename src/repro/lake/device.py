@@ -1,0 +1,188 @@
+"""Device-side read assembly: staged host buffers -> accelerator arrays.
+
+The last hop of the read pipeline (fetch -> staged decode -> **device**).
+Codecs route decoded chunk payloads here instead of materializing a full
+host tensor:
+
+* :class:`ChunkAssembler` — a preallocated ``(n_slots, row_elems)`` staging
+  buffer that chunk frames are written into via ``memoryview`` writes in
+  **arrival order** (one copy off the decode path, no per-chunk
+  intermediates); ``gather()`` then moves the buffer to the device once and
+  reorders it there with the ``block_gather`` Pallas kernel. The only host
+  copy is the staging write itself — never a second, ordered full-tensor
+  copy.
+* :func:`scatter_coo` — COO decode straight to a dense *device* buffer via
+  the ``coo_scatter`` kernel: indices/values are the only host arrays; the
+  dense tensor first exists on the device.
+* :func:`to_device` / :func:`device_dtype_exact` — the jax boundary.
+  ``jax.device_put`` silently downcasts 64-bit dtypes unless
+  ``jax_enable_x64`` is set, so anything that cannot round-trip bit-exactly
+  stays in numpy (the uniform fallback also covers hosts without jax).
+
+This module deliberately imports nothing from ``repro.core`` (the codecs in
+``core/encodings`` call down into it) and defers the jax import until a
+device path actually runs, so ``import repro.lake`` stays cheap.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+_JAX: Any = None
+_KOPS: Any = None
+_PROBED = False
+
+
+def _mods() -> Tuple[Any, Any]:
+    """(jax, repro.kernels.ops) or (None, None) — probed once, lazily."""
+    global _JAX, _KOPS, _PROBED
+    if not _PROBED:
+        _PROBED = True
+        try:
+            import jax as _j
+
+            from ..kernels import ops as _k
+            _JAX, _KOPS = _j, _k
+        except Exception:  # jax absent: every entry point falls back to numpy
+            _JAX, _KOPS = None, None
+    return _JAX, _KOPS
+
+
+def have_jax() -> bool:
+    return _mods()[0] is not None
+
+
+def is_device_array(x: Any) -> bool:
+    """True when ``x`` lives on a jax device (vs. the numpy fallback)."""
+    jx, _ = _mods()
+    return jx is not None and isinstance(x, jx.Array)
+
+
+def device_dtype_exact(dtype: Any) -> bool:
+    """True when jax holds ``dtype`` bit-exactly under the current config.
+
+    Without ``jax_enable_x64``, ``device_put`` canonicalizes f64 -> f32 /
+    i64 -> i32 — a silent precision loss the read path must never commit.
+    """
+    jx, _ = _mods()
+    if jx is None:
+        return False
+    dt = np.dtype(dtype)
+    try:
+        return np.dtype(jx.dtypes.canonicalize_dtype(dt)) == dt
+    except TypeError:
+        return False
+
+
+def to_device(arr: np.ndarray) -> Any:
+    """``jax.device_put`` when bit-exact; the numpy array itself otherwise."""
+    jx, _ = _mods()
+    if jx is not None and device_dtype_exact(arr.dtype):
+        return jx.device_put(arr)
+    return arr
+
+
+@dataclass
+class DeviceReadInfo:
+    """Accounting for one device read, for stats and the zero-copy gate.
+
+    ``path`` names how the tensor reached the device: ``"block_gather"``
+    (chunk staging + device reorder), ``"coo_scatter"`` (sparse pairs
+    scattered on device), or ``"host_fallback"`` (host decode then one
+    transfer — layouts without a device kernel, or dtypes jax cannot hold).
+    ``host_staged_bytes`` is every byte the read materialized on the host
+    en route — the zero-full-tensor-copy claim is ``host_staged_bytes``
+    not exceeding the payload actually read (never ordered-copy doubled,
+    and for slice/sparse reads strictly less than the dense tensor).
+    """
+
+    path: str
+    host_staged_bytes: int
+    device_bytes: int
+    on_device: bool
+
+
+class ChunkAssembler:
+    """Arrival-order chunk staging + on-device reorder.
+
+    ``add(out_pos, blob)`` writes a chunk payload into the next free
+    staging row via a ``memoryview`` write (chunks land in whatever order
+    the pipeline delivers them); ``gather()`` device-puts the staging
+    buffer once and permutes rows into output order with the
+    ``block_gather`` kernel (one ``(1, row_elems)`` tile per row). Without
+    jax — or for dtypes the device cannot hold bit-exactly — the reorder
+    is a numpy fancy-index instead.
+    """
+
+    def __init__(self, n_slots: int, row_elems: int, dtype: Any):
+        self.dtype = np.dtype(dtype)
+        self.n_slots = int(n_slots)
+        self.row_elems = max(1, int(row_elems))
+        self._buf = np.empty((self.n_slots, self.row_elems), dtype=self.dtype)
+        self._rows = self._buf.view(np.uint8).reshape(self.n_slots, -1)
+        # output position -> staging row, steering the gather
+        self._ids = np.empty(self.n_slots, dtype=np.int32)
+        self.count = 0
+
+    @property
+    def staged_bytes(self) -> int:
+        return self.count * self._rows.shape[1]
+
+    def add(self, out_pos: int, blob: Any) -> None:
+        """Stage one chunk payload destined for output row ``out_pos``."""
+        row = self.count
+        self._rows[row] = np.frombuffer(blob, dtype=np.uint8)
+        self._ids[out_pos] = row
+        self.count += 1
+
+    def gather(self, *, use_pallas: Optional[bool] = None) -> Any:
+        """The ``(n_slots, row_elems)`` array in output order (device when
+        possible), transferring the staging buffer exactly once."""
+        if self.count != self.n_slots:
+            raise ValueError(
+                f"assembled {self.count} of {self.n_slots} chunks")
+        if self.n_slots == 0:
+            return to_device(self._buf)
+        _, kops = _mods()
+        if kops is not None and device_dtype_exact(self.dtype):
+            # complex is not a Pallas-supported element type (and the
+            # interpreter cannot allocate complex outputs); the jnp
+            # reference gather still runs on the device
+            if np.issubdtype(self.dtype, np.complexfloating):
+                use_pallas = False
+            tiles = kops.block_gather_host(self._buf, self._ids,
+                                           (1, self.row_elems),
+                                           use_pallas=use_pallas)
+            # the gather's zero-fill for padding ids promotes bool tiles to
+            # int32 — every id here is valid, so casting back is exact
+            if tiles.dtype != self.dtype:
+                tiles = tiles.astype(self.dtype)
+            return tiles.reshape(self.n_slots, self.row_elems)
+        return self._buf[self._ids]
+
+    def on_device(self) -> bool:
+        """Whether :meth:`gather` will land on a jax device."""
+        return _mods()[1] is not None and device_dtype_exact(self.dtype)
+
+
+def scatter_coo(flat_idx: np.ndarray, values: np.ndarray, size: int, *,
+                use_pallas: Optional[bool] = None) -> Any:
+    """Dense flat ``(size,)`` buffer from COO pairs — on device when the
+    kernels and dtype allow, else a numpy ``np.add.at`` scatter."""
+    size = int(size)
+    _, kops = _mods()
+    if (kops is not None and size > 0 and size < 2**31
+            and device_dtype_exact(values.dtype)):
+        # complex is not a Pallas-supported element type; the jnp
+        # reference scatter still runs on the device
+        if np.issubdtype(np.dtype(values.dtype), np.complexfloating):
+            use_pallas = False
+        return kops.coo_scatter_host(flat_idx, values, size,
+                                     use_pallas=use_pallas)
+    out = np.zeros(size, dtype=values.dtype)
+    if len(flat_idx):
+        np.add.at(out, flat_idx, values)
+    return out

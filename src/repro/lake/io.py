@@ -20,7 +20,11 @@ weight loading) funnels its object-store fetches through one
   wire, so the cache stores *decoded* blocks — a warm read pays neither
   the bandwidth nor the decode cost — while the object store (and any
   modeled :class:`~repro.lake.object_store.LatencyModel`) charges the
-  compressed size; unframed bytes pass through untouched;
+  compressed size; unframed bytes pass through untouched. Decode runs on
+  a **staged pool** (``decode_workers``) with a bounded handoff queue, so
+  decompression of chunk *k* overlaps the fetch of chunk *k+1* instead of
+  serializing behind the wire — ``ReadStats.decode_s`` /
+  ``decode_overlap_frac`` carry the evidence;
 * **request hedging** (straggler mitigation): if a get hasn't finished
   after ``hedge_after_s`` a duplicate is raced against it and the first
   result wins — object-store reads are idempotent so duplicates are safe;
@@ -43,10 +47,15 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
-from .compression import decode_frame, frame_info
+from .compression import decode_frame, frame_info, is_framed
 
 DEFAULT_MAX_WORKERS = 8
 DEFAULT_CACHE_BYTES = 64 << 20
+# staged decode: frames are unwrapped on a small dedicated pool so the
+# fetch thread goes straight back to the wire — decompression of chunk k
+# overlaps the fetch of chunk k+1. 0 disables the stage (decode inline on
+# the fetch thread, the pre-pipeline behavior).
+DEFAULT_DECODE_WORKERS = 2
 
 # delta frames may chain (defensively bounded; writers only ever target
 # non-delta bases, so a well-formed store needs depth 1)
@@ -222,13 +231,26 @@ class ReadStats:
     plan_requests: int = 0
     plan_keys_fetched: int = 0
     plan_keys_deduped: int = 0
+    # staged decode: real seconds spent unwrapping frames, the portion of
+    # that time during which at least one fetch was in flight (wall-clock
+    # sampled — the overlap evidence), frames decoded off the fetch
+    # thread, and bytes handed to an accelerator device by device reads
+    decode_s: float = 0.0
+    decode_overlap_s: float = 0.0
+    decodes_offloaded: int = 0
+    bytes_to_device: int = 0
     # per-request latency histogram (virtual-clock durations on a modeled
     # store, wall-clock otherwise); see LatencyHistogram
     latency: LatencyHistogram = field(default_factory=LatencyHistogram,
                                       repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
-    def bump(self, **deltas: int) -> None:
+    @property
+    def decode_overlap_frac(self) -> float:
+        """Fraction of decode seconds that overlapped an in-flight fetch."""
+        return self.decode_overlap_s / self.decode_s if self.decode_s else 0.0
+
+    def bump(self, **deltas: float) -> None:
         """Atomically add ``deltas`` to the named counters."""
         with self._lock:
             for k, d in deltas.items():
@@ -244,6 +266,9 @@ class ReadStats:
             self.deltas_reconstructed = 0
             self.plans = self.plan_requests = 0
             self.plan_keys_fetched = self.plan_keys_deduped = 0
+            self.decode_s = self.decode_overlap_s = 0.0
+            self.decodes_offloaded = 0
+            self.bytes_to_device = 0
         self.latency.reset()
 
 
@@ -423,21 +448,45 @@ class ReadExecutor:
     testbed saturates around 8 streams; width is configurable so benchmarks
     can sweep it). ``cache_bytes=0`` disables caching. ``hedge_after_s``
     enables hedged gets on every fetch routed through this executor.
+
+    ``decode_workers`` sizes the staged-decode pool: framed (compressed)
+    blocks come off the wire on an I/O thread but are decompressed on this
+    separate stage, so decode of chunk *k* overlaps the fetch of *k+1*.
+    ``decode_queue`` bounds frames parked between the stages (backpressure:
+    when decoders fall behind, fetch threads block handing off rather than
+    buffering the whole scan). ``decode_workers=0`` restores inline decode
+    on the fetch thread.
     """
 
     def __init__(self, max_workers: int = DEFAULT_MAX_WORKERS, *,
                  cache_bytes: int = DEFAULT_CACHE_BYTES,
                  hedge_after_s: Optional[float] = None,
-                 hedge_attempts: int = 2):
+                 hedge_attempts: int = 2,
+                 decode_workers: Optional[int] = None,
+                 decode_queue: Optional[int] = None):
         self.max_workers = max(1, int(max_workers))
         self.cache = BlockCache(cache_bytes)
         self.stats = ReadStats()
         self.hedge_after_s = hedge_after_s
         self.hedge_attempts = max(1, int(hedge_attempts))
+        self.decode_workers = (DEFAULT_DECODE_WORKERS if decode_workers is None
+                               else max(0, int(decode_workers)))
         self._io = ThreadPoolExecutor(
             max_workers=self.max_workers, thread_name_prefix="lakeio")
         self._work = ThreadPoolExecutor(
             max_workers=self.max_workers, thread_name_prefix="lakework")
+        self._decode: Optional[ThreadPoolExecutor] = None
+        if self.decode_workers:
+            self._decode = ThreadPoolExecutor(
+                max_workers=self.decode_workers,
+                thread_name_prefix="lakedecode")
+            slots = (4 * self.decode_workers if decode_queue is None
+                     else max(1, int(decode_queue)))
+            self._decode_slots = threading.BoundedSemaphore(slots)
+        # gets currently on the wire (sampled by the decode stage as the
+        # wall-clock overlap evidence)
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
 
     # -- raw gets ------------------------------------------------------------
 
@@ -447,7 +496,13 @@ class ReadExecutor:
         # sample is the deterministic virtual-clock duration of this
         # request (queueing + RTT + transfer); otherwise wall clock.
         t0 = time.perf_counter()
-        data = store.get(key)
+        with self._inflight_lock:
+            self._inflight += 1
+        try:
+            data = store.get(key)
+        finally:
+            with self._inflight_lock:
+                self._inflight -= 1
         lm = getattr(store, "latency", None)
         lat = getattr(lm, "request_latency_s", lambda: None)()
         if lat is None:
@@ -513,11 +568,102 @@ class ReadExecutor:
     def _fetch_miss(self, store: Any, key: str,
                     cache_key: Optional[Tuple[int, str]],
                     partition: Optional[str] = None) -> bytes:
-        data = self._decode_wire(store, self._get_raw(store, key),
-                                 partition=partition)
+        # inline path (decode stage disabled): fetch and decode on the same
+        # I/O thread, decode serializing ahead of this thread's next fetch
+        raw = self._get_raw(store, key)
+        data = self._decode_timed(store, raw, partition,
+                                  self._virtual_done(store))
         if cache_key is not None:
             self.cache.put(cache_key, data, partition)
         return data
+
+    # -- staged decode -------------------------------------------------------
+
+    def _virtual_done(self, store: Any) -> Optional[float]:
+        # the calling thread's virtual completion on a modeled store: the
+        # moment the bytes it just fetched exist, which the decode stage
+        # passes along as the causal floor for its compute charge. (Hedged
+        # gets land on daemon threads, so the winner's completion may not
+        # be visible here — the decode charge then floors at the decode
+        # thread's own timeline, a benign underestimate.)
+        fn = getattr(getattr(store, "latency", None), "thread_done_s", None)
+        return fn() if fn is not None else None
+
+    def _decode_timed(self, store: Any, raw: bytes,
+                      partition: Optional[str],
+                      ready: Optional[float]) -> bytes:
+        """Decode ``raw`` with time accounting; unframed bytes pass through.
+
+        Real decode seconds are bumped into the stats and — on a modeled
+        store — charged onto the virtual timeline via ``charge_compute``
+        (starting no earlier than ``ready``, the fetch's virtual
+        completion), so ``elapsed_s`` reports the pipelined makespan while
+        ``io_elapsed_s`` keeps the pure wire time.
+        """
+        if not is_framed(raw):
+            return raw
+        t0 = time.perf_counter()
+        overlapped = self._inflight > 0
+        data = self._decode_wire(store, raw, partition=partition)
+        d = time.perf_counter() - t0
+        overlapped = overlapped or self._inflight > 0
+        self.stats.bump(decode_s=d, decode_overlap_s=d if overlapped else 0.0)
+        lm = getattr(store, "latency", None)
+        if lm is not None and getattr(lm, "virtual_clock", False):
+            charge = getattr(lm, "charge_compute", None)
+            if charge is not None:
+                charge(d, not_before=ready)
+        return data
+
+    def _submit_miss(self, store: Any, key: str,
+                     cache_key: Optional[Tuple[int, str]],
+                     partition: Optional[str]) -> Future:
+        """Submit one cache-miss fetch; decode rides the staged pool."""
+        if self._decode is None:
+            return self._io.submit(self._fetch_miss, store, key, cache_key,
+                                   partition)
+        out: Future = Future()
+        self._io.submit(self._wire_stage, store, key, cache_key, partition,
+                        out)
+        return out
+
+    def _wire_stage(self, store: Any, key: str,
+                    cache_key: Optional[Tuple[int, str]],
+                    partition: Optional[str], out: Future) -> None:
+        if not out.set_running_or_notify_cancel():
+            return
+        try:
+            raw = self._get_raw(store, key)
+        except BaseException as e:
+            out.set_exception(e)
+            return
+        if not is_framed(raw):
+            # nothing to decode — complete on the wire thread, no handoff
+            if cache_key is not None:
+                self.cache.put(cache_key, raw, partition)
+            out.set_result(raw)
+            return
+        ready = self._virtual_done(store)
+        # bounded handoff: when decoders fall behind, the fetch thread
+        # blocks here instead of buffering unbounded frames
+        self._decode_slots.acquire()
+        self.stats.bump(decodes_offloaded=1)
+        self._decode.submit(self._decode_stage, store, raw, cache_key,
+                            partition, ready, out)
+
+    def _decode_stage(self, store: Any, raw: bytes,
+                      cache_key: Optional[Tuple[int, str]],
+                      partition: Optional[str], ready: Optional[float],
+                      out: Future) -> None:
+        try:
+            data = self._decode_timed(store, raw, partition, ready)
+            if cache_key is not None:
+                self.cache.put(cache_key, data, partition)
+            out.set_result(data)
+        except BaseException as e:
+            out.set_exception(e)
+        finally:
+            self._decode_slots.release()
 
     # -- public fetch API ----------------------------------------------------
 
@@ -540,8 +686,7 @@ class ReadExecutor:
                 self.stats.bump(cache_hits=1)
                 return hit
             self.stats.bump(cache_misses=1)
-        return self._io.submit(self._fetch_miss, store, key, ck,
-                               cache_partition).result()
+        return self._submit_miss(store, key, ck, cache_partition).result()
 
     def fetch_ordered(self, store: Any, keys: Sequence[str], *,
                       cacheable: bool = True,
@@ -583,8 +728,7 @@ class ReadExecutor:
                     f.set_result(hit)
                     return f
                 self.stats.bump(cache_misses=1)
-            return self._io.submit(self._fetch_miss, store, key, ck,
-                                   cache_partition)
+            return self._submit_miss(store, key, ck, cache_partition)
 
         try:
             for i in range(min(window, len(keys))):
@@ -685,6 +829,8 @@ class ReadExecutor:
         private executors should close them — or use ``with`` blocks."""
         self._work.shutdown(wait=wait)
         self._io.shutdown(wait=wait)
+        if self._decode is not None:
+            self._decode.shutdown(wait=wait)
 
     def __enter__(self) -> "ReadExecutor":
         return self

@@ -172,6 +172,8 @@ class LatencyModel:
     occupancy_scale: float = 0.0
     elapsed_s: float = 0.0
     serial_s: float = 0.0
+    compute_s: float = 0.0
+    io_elapsed_s: float = 0.0
     requests: int = 0
     bytes_moved: int = 0
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
@@ -195,7 +197,9 @@ class LatencyModel:
             self.serial_s += cost
             if self.parallelism <= 1:
                 self.elapsed_s += cost
+                self.io_elapsed_s += cost
                 self._thread_latency[tid] = cost
+                self._thread_done[tid] = self.elapsed_s
             else:
                 if len(self._channels) != self.parallelism:
                     self._channels = [0.0] * self.parallelism
@@ -213,11 +217,51 @@ class LatencyModel:
                 self._channels[i] = done
                 self._thread_done[tid] = done
                 self._transfer_s += transfer
-                self.elapsed_s = max(max(self._channels), self._transfer_s)
+                # channels hold pure wire time; compute charges (decode
+                # stage) only ever push elapsed_s past io_elapsed_s
+                self.io_elapsed_s = max(max(self._channels), self._transfer_s)
+                self.elapsed_s = max(self.elapsed_s, self.io_elapsed_s)
         if not self.virtual_clock:
             time.sleep(cost)
         elif self.occupancy_scale > 0.0:
             time.sleep(cost * self.occupancy_scale)
+
+    def charge_compute(self, seconds: float, *,
+                       not_before: Optional[float] = None) -> None:
+        """Charge real CPU seconds (frame decode) onto the virtual timeline.
+
+        The calling thread's virtual clock advances by ``seconds`` starting
+        at max(its previous virtual completion, ``not_before``) —
+        ``not_before`` carries the producing fetch's virtual completion, so
+        decode causally follows the bytes it decodes while overlapping
+        other threads' wire time. Compute is off-channel: it never occupies
+        an object-store channel, so ``io_elapsed_s`` stays the pure-I/O
+        makespan and ``elapsed_s`` becomes the pipelined makespan.
+        """
+        s = max(0.0, float(seconds))
+        tid = threading.get_ident()
+        with self._lock:
+            self.compute_s += s
+            self.serial_s += s
+            if self.parallelism <= 1:
+                self.elapsed_s += s
+                self._thread_done[tid] = self.elapsed_s
+                return
+            start = max(self._thread_done.get(tid, 0.0), not_before or 0.0)
+            done = start + s
+            self._thread_done[tid] = done
+            if done > self.elapsed_s:
+                self.elapsed_s = done
+
+    def thread_done_s(self) -> Optional[float]:
+        """The calling thread's virtual completion time (None if it has
+        not been charged yet, or in real-sleep mode). The decode stage
+        reads this on the fetch thread to timestamp when a frame's bytes
+        exist in virtual time."""
+        if not self.virtual_clock:
+            return None
+        with self._lock:
+            return self._thread_done.get(threading.get_ident())
 
     def request_latency_s(self) -> Optional[float]:
         """Virtual-clock latency of the calling thread's last request.
@@ -237,6 +281,8 @@ class LatencyModel:
         with self._lock:
             self.elapsed_s = 0.0
             self.serial_s = 0.0
+            self.compute_s = 0.0
+            self.io_elapsed_s = 0.0
             self.requests = 0
             self.bytes_moved = 0
             self._channels = []

@@ -1,0 +1,101 @@
+"""Pallas byte-unshuffle kernel (interpret mode) vs the numpy plane transpose.
+
+* kernel/oracle parity across every fixed-width dtype's itemsize;
+* ragged widths exercise the wrapper's pad-and-crop path;
+* `install_unshuffle_kernel(force=True)` routes `byte_unshuffle` through the
+  kernel and must stay byte-identical to the pure-numpy fallback — including
+  under the PR-5 shuffle∘unshuffle identity property.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from ._hypothesis_compat import given, settings, st  # skips property tests if hypothesis is missing
+
+from repro.kernels import install_unshuffle_kernel, ops, ref, unshuffle_host
+from repro.lake import byte_shuffle, byte_unshuffle, set_unshuffle_kernel
+
+RNG = np.random.default_rng(11)
+
+FIXED_WIDTH_DTYPES = ["int8", "uint8", "int16", "uint16", "int32", "uint32",
+                      "int64", "uint64", "float16", "float32", "float64",
+                      "complex64", "complex128", "bool"]
+
+
+@pytest.fixture
+def kernel_installed():
+    """byte_unshuffle routed through the Pallas kernel for one test."""
+    assert install_unshuffle_kernel(force=True)
+    yield
+    set_unshuffle_kernel(None)
+
+
+def _planes(itemsize, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, (itemsize, n), dtype=np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", FIXED_WIDTH_DTYPES)
+def test_unshuffle_matches_numpy_every_fixed_width_dtype(dtype):
+    it = np.dtype(dtype).itemsize
+    planes = _planes(it, 1024, seed=it)
+    got = ops.unshuffle(jnp.asarray(planes), use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), planes.T)
+
+
+@pytest.mark.parametrize("n", [1, 3, 511, 512, 513, 1300])
+def test_unshuffle_ragged_widths_pad_and_crop(n):
+    # n not a multiple of the 512 tile: the ops wrapper pads and crops
+    planes = _planes(4, n, seed=n)
+    got = ops.unshuffle(jnp.asarray(planes), use_pallas=True)
+    want = ref.unshuffle(jnp.asarray(planes))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), planes.T)
+
+
+def test_unshuffle_host_returns_numpy():
+    planes = _planes(8, 640, seed=2)
+    out = unshuffle_host(planes, use_pallas=True)
+    assert isinstance(out, np.ndarray)
+    np.testing.assert_array_equal(out, planes.T)
+
+
+# ---------------------------------------------------------------------------
+# byte_unshuffle kernel hook
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", FIXED_WIDTH_DTYPES)
+def test_byte_unshuffle_kernel_hook_byte_identical(dtype, kernel_installed):
+    it = np.dtype(dtype).itemsize
+    for n in (0, 1, it, 7 * it + 3, 4096):
+        raw = RNG.integers(0, 256, n, dtype=np.uint8).tobytes()
+        shuf = bytes(byte_shuffle(raw, it))
+        got = byte_unshuffle(shuf, it)
+        set_unshuffle_kernel(None)
+        want = byte_unshuffle(shuf, it)
+        install_unshuffle_kernel(force=True)
+        assert bytes(got) == bytes(want) == raw
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.binary(min_size=0, max_size=2048),
+       st.integers(min_value=1, max_value=16))
+def test_shuffle_unshuffle_identity_property_with_kernel(raw, itemsize):
+    """PR-5 identity property holds with the Pallas kernel installed."""
+    install_unshuffle_kernel(force=True)
+    try:
+        assert byte_unshuffle(byte_shuffle(raw, itemsize), itemsize) == raw
+    finally:
+        set_unshuffle_kernel(None)
+
+
+def test_install_is_noop_off_tpu_without_force():
+    from repro.lake import compression
+    set_unshuffle_kernel(None)
+    assert install_unshuffle_kernel() is ops._on_tpu()
+    if not ops._on_tpu():
+        assert compression.get_unshuffle_kernel() is None
