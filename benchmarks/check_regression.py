@@ -35,6 +35,12 @@ configuration lost a write. Gated metrics:
   at most 2.5x the base's physical bytes, that deleting half the
   variants + vacuum reclaims EXACTLY their unshared objects, and that
   leased reads stayed byte-identical through the churn;
+* ``BENCH_ingest.json`` — watermark-64 streaming-ingest throughput vs the
+  eager batch-put baseline (also hard-floored at 1.0x: streaming must not
+  be a throughput tax), the live-reader invariant that an epoch streamed
+  while a writer commits stays within 1.2x of the quiesced epoch, and the
+  crash invariants that a writer killed at every flush seam tears ZERO
+  visible versions with vacuum reclaiming EXACTLY the orphans;
 * ``BENCH_serve_traffic.json`` — gateway cold-start coalescing: store
   requests issued by N independent frontends vs the single-flighted
   gateway (also hard-floored at 2.0x, with >= 1 coalesced flight join
@@ -72,6 +78,8 @@ GATES = [
      lambda d: float(d["gate"]["loader_vs_serial_w8"])),
     ("BENCH_dedup.json", "naive vs CAS physical bytes (8-variant fan-out)",
      lambda d: float(d["gate"]["naive_vs_dedup"])),
+    ("BENCH_ingest.json", "watermark-64 ingest vs batch-put throughput",
+     lambda d: float(d["gate"]["ingest_vs_batch_put"])),
     ("BENCH_serve_traffic.json", "gateway cold-start coalescing request ratio",
      lambda d: float(d["gate"]["coalesce_requests_ratio"])),
     ("BENCH_serve_traffic.json", "mid-run Jain fairness under burst traffic",
@@ -87,6 +95,8 @@ MAX_VARIANTS_VS_BASE = 2.5            # 8 variants' physical bytes vs base
 MIN_COALESCE_RATIO = 2.0              # uncoalesced/coalesced store requests
 MIN_SERVE_FAIRNESS = 0.80             # mid-run Jain index (acceptance)
 MAX_DEVICE_PIPELINE_RATIO = 0.8       # pipelined / fetch-then-decode (accept.)
+MIN_INGEST_VS_BATCH_PUT = 1.0         # streaming ingest parity (acceptance)
+MAX_LIVE_READER_OVERHEAD = 1.2        # live epoch / quiesced epoch (accept.)
 
 
 def _load(path: str) -> dict:
@@ -229,6 +239,36 @@ def main(argv=None) -> int:
         print(f"[OK] dedup: variants at {vratio:.2f}x base physical "
               f"(naive {float(dgate['naive_vs_dedup']):.2f}x larger), "
               f"churn reclaim exact, leased reads identical")
+
+    ingest = _load(os.path.join(args.fresh, "BENCH_ingest.json"))
+    igate = ingest["gate"]
+    iratio = float(igate["ingest_vs_batch_put"])
+    ioverhead = float(igate["live_reader_overhead"])
+    itorn = int(igate["torn_versions"])
+    if iratio < MIN_INGEST_VS_BATCH_PUT:
+        print(f"[REGRESSION] watermark ingest at {iratio:.2f}x batch-put "
+              f"< hard floor {MIN_INGEST_VS_BATCH_PUT:.2f}x; streaming "
+              f"became a throughput tax")
+        failures.append("ingest parity floor")
+    if ioverhead > MAX_LIVE_READER_OVERHEAD:
+        print(f"[REGRESSION] live-reader epoch at {ioverhead:.2f}x quiesced "
+              f"> ceiling {MAX_LIVE_READER_OVERHEAD:.2f}x; ingest commits "
+              f"are blocking readers")
+        failures.append("ingest live-reader ceiling")
+    if itorn != 0:
+        print(f"[REGRESSION] {itorn} torn visible version(s) after "
+              f"crash-at-every-seam; commits must be all-or-nothing")
+        failures.append("ingest torn versions")
+    if not igate.get("orphan_reclaim_exact"):
+        print("[REGRESSION] vacuum after a crashed flush did not reclaim "
+              "exactly the crash's orphans")
+        failures.append("ingest orphan reclaim")
+    if iratio >= MIN_INGEST_VS_BATCH_PUT and \
+            ioverhead <= MAX_LIVE_READER_OVERHEAD and itorn == 0 and \
+            igate.get("orphan_reclaim_exact"):
+        print(f"[OK] ingest: {iratio:.2f}x batch-put, live reader at "
+              f"{ioverhead:.2f}x quiesced, {len(ingest['crash']['seams'])} "
+              f"crash seams torn-free with exact reclaim")
 
     serve = _load(os.path.join(args.fresh, "BENCH_serve_traffic.json"))
     sgate = serve["gate"]

@@ -69,32 +69,6 @@ MAX_CACHED_HEADERS = 1024
 DEFAULT_SPILL_THRESHOLD = 512
 
 
-def _approx_row_bytes(columns: Dict[str, Any], rows: int) -> float:
-    total = 0
-    for v in columns.values():
-        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
-            total += v.nbytes
-        else:
-            for item in v:
-                if isinstance(item, (bytes, bytearray)):
-                    total += len(item)
-                elif isinstance(item, np.ndarray):
-                    total += item.nbytes
-                else:
-                    total += 8
-    return total / max(rows, 1)
-
-
-def _slice_columns(columns: Dict[str, Any], lo: int, hi: int) -> Dict[str, Any]:
-    out = {}
-    for k, v in columns.items():
-        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
-            out[k] = v[lo:hi]
-        else:
-            out[k] = list(v[lo:hi])
-    return out
-
-
 def _select_rows(columns: Dict[str, Any],
                  idx: Sequence[int]) -> Dict[str, Any]:
     """Row selection by (possibly reordered) index list — the variant
@@ -597,20 +571,12 @@ class DeltaTensorStore:
                      target: int, guard=None, cas: Optional[ChunkIndex] = None,
                      dedup_seen: Optional[set] = None) -> List[Dict[str, Any]]:
         """Split ``columns`` into ~``target``-byte part files and upload
-        them (no commit) under the tensor's partition values."""
-        rows = len(next(iter(columns.values())))
-        per_file = max(1, int(target //
-                              max(_approx_row_bytes(columns, rows), 1)))
-        adds: List[Dict[str, Any]] = []
-        for lo in range(0, rows, per_file):
-            cols = _slice_columns(columns, lo, min(rows, lo + per_file))
-            adds.append(table.append(
-                cols, commit=False, guard=guard,
-                compression=spec, shuffle_itemsize=itemsize,
-                cas=cas, dedup_seen=dedup_seen,
-                partition_values={"tensor": tid, "kind": kind,
-                                  "layout": layout}))
-        return adds
+        them (no commit) under the tensor's partition values — a thin
+        wrapper over :meth:`~repro.lake.table.DeltaTable.append_split`."""
+        return table.append_split(
+            columns, target_bytes=target, guard=guard, compression=spec,
+            shuffle_itemsize=itemsize, cas=cas, dedup_seen=dedup_seen,
+            partition_values={"tensor": tid, "kind": kind, "layout": layout})
 
     def _encode_and_upload_variant(self, tensor: Any, *, base_tid: str,
                                    tensor_id: str, guard_for,
@@ -864,6 +830,29 @@ class DeltaTensorStore:
         return self.catalog(version).read_many(
             requests, window=window, io=io, cache_partition=cache_partition,
             device=device)
+
+    def ingest(self, tensor_id: str, *, watermark_rows: int = 64,
+               watermark_s: Optional[float] = None,
+               target_file_bytes: Optional[int] = None,
+               compression: Union[None, str, CompressionSpec] = None,
+               commit_retries: Optional[int] = None,
+               clock=None):
+        """A streaming :class:`~repro.data.ingest.IngestWriter` on ``tensor_id``.
+
+        ``writer.append_rows(rows)`` buffers sample rows and commits them
+        as grown FTSF chunk files whenever ``watermark_rows`` rows (or
+        ``watermark_s`` seconds of buffer age) accumulate — each flush is
+        one fenced atomic commit through the two-phase upload path, so
+        concurrent batch writers, ``compact``, ``vacuum``, and epoch-pinned
+        readers all keep working. The tensor is created on first flush if
+        it does not exist (row shape/dtype inferred from the first rows).
+        """
+        from ..data.ingest import IngestWriter  # data sits above core
+        return IngestWriter(self, tensor_id, watermark_rows=watermark_rows,
+                            watermark_s=watermark_s,
+                            target_file_bytes=target_file_bytes,
+                            compression=compression,
+                            commit_retries=commit_retries, clock=clock)
 
     def models(self, prefix: str, *, version: VersionArg = None):
         """A :class:`~repro.serve.repo.ModelRepo` handle over ``prefix``.

@@ -90,6 +90,8 @@ class StreamLoader:
         if not self.tensor_ids:
             raise ValueError("StreamLoader needs at least one tensor")
         self.batch = int(batch_size)
+        self.host_index = int(host_index)
+        self.n_hosts = int(n_hosts)
         self.seed = int(seed)
         self.window = max(1, int(window))
         self.epochs = epochs
@@ -131,7 +133,7 @@ class StreamLoader:
         self._offsets = np.asarray(offsets, dtype=np.int64)
 
         self.owned = np.arange(int(self._offsets[-1]),
-                               dtype=np.int64)[host_index::n_hosts]
+                               dtype=np.int64)[self.host_index::self.n_hosts]
         if len(self.owned) < self.batch:
             raise ValueError("fewer owned samples than batch size")
         self.steps_per_epoch = len(self.owned) // self.batch
@@ -164,6 +166,33 @@ class StreamLoader:
     def closed(self) -> bool:
         """Whether the snapshot lease has been released."""
         return not self._finalizer.alive
+
+    def reopen(self, *, version: VersionArg = None,
+               start_cursor: Cursor = (0, 0)) -> "StreamLoader":
+        """Hand off to a fresh loader pinned at ``version`` (latest if None).
+
+        The streaming-ingest handoff: this loader's snapshot is frozen by
+        design — rows an :class:`~repro.data.ingest.IngestWriter` commits
+        after the pin are invisible to it. Between epochs, call
+        ``loader = loader.reopen()`` to re-pin at the store's current
+        latest: the new loader has identical configuration (batch size,
+        host split, seed, window, ...), sees every row committed since,
+        and restarts its epoch/step counters at ``start_cursor``. This
+        loader is closed (its lease released) once the new one holds its
+        own lease, so there is no window where vacuum could reclaim either
+        generation's files.
+        """
+        new = StreamLoader(
+            self.store, list(self.tensor_ids), batch_size=self.batch,
+            host_index=self.host_index, n_hosts=self.n_hosts,
+            seed=self.seed, window=self.window, epochs=self.epochs,
+            start_cursor=start_cursor, version=version,
+            hedge_after_s=self.hedge_after_s, io=self.io,
+            read_window=self.read_window,
+            clock=None if self.clock is time.perf_counter else self.clock,
+            device=self.device)
+        self.close()
+        return new
 
     def __enter__(self) -> "StreamLoader":
         return self

@@ -1,5 +1,7 @@
-from .object_store import (InMemoryObjectStore, LatencyModel, LocalFSObjectStore,
-                           ObjectNotFoundError, ObjectStore, PutIfAbsentError)
+from .object_store import (FaultInjectingObjectStore, FaultRule,
+                           InjectedFault, InMemoryObjectStore, LatencyModel,
+                           LocalFSObjectStore, ObjectNotFoundError,
+                           ObjectStore, PutIfAbsentError)
 from .log import (CommitConflict, DeltaLog, Snapshot, catalog_index_key,
                   catalog_index_version)
 from .compression import (CompressionSpec, UnknownCodecError, available_codecs,
@@ -16,6 +18,7 @@ from .device import ChunkAssembler, DeviceReadInfo, to_device
 
 __all__ = [
     "InMemoryObjectStore", "LatencyModel", "LocalFSObjectStore", "ObjectStore",
+    "FaultInjectingObjectStore", "FaultRule", "InjectedFault",
     "ObjectNotFoundError", "PutIfAbsentError", "CommitConflict", "DeltaLog",
     "Snapshot", "DeltaTable", "file_overlaps", "columnar", "device",
     "BlockCache", "ReadExecutor", "ReadStats", "get_default_executor",

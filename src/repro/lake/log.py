@@ -177,6 +177,29 @@ class DeltaLog:
         self._latest = v
         return v
 
+    def refresh_latest(self) -> int:
+        """Authoritative re-resolution of the latest version.
+
+        The probe-forward cache in :meth:`latest_version` trusts a single
+        ``head(v + 1)`` miss to mean "no newer commit" — under an external
+        writer on an eventually-consistent store (HEAD-after-PUT lag), that
+        probe can miss a commit that a full listing already shows. This
+        drops the cached floor and re-resolves from the log listing plus
+        the checkpoint pointer, then probes forward from whichever is
+        higher. Called by :meth:`snapshot` before declaring a version
+        "future" (invalidate-on-miss); operators can call it directly to
+        force a freshness check.
+        """
+        ckpt = self._checkpoint_version()
+        v = max(self._list_latest(), ckpt if ckpt is not None else -1)
+        while self.store.exists(_log_key(self.table, v + 1)):
+            v += 1
+        # the cached floor only ever moves forward: a stale LIST on the
+        # same eventually-consistent store must not un-learn a version
+        # this client has already observed
+        self._latest = max(self._latest or -1, v)
+        return self._latest
+
     def _checkpoint_version(self) -> Optional[int]:
         """Version recorded in ``_last_checkpoint`` (a known-to-exist floor)."""
         try:
@@ -258,6 +281,11 @@ class DeltaLog:
             if cached is not None:
                 return cached
         latest = self.latest_version()
+        if version is not None and version > latest:
+            # invalidate-on-miss: an external writer may have landed a
+            # commit the forward probe missed (see refresh_latest) — only
+            # re-list before concluding the caller asked for the future
+            latest = self.refresh_latest()
         if latest < 0:
             raise ObjectNotFoundError(f"no delta table at {self.table}")
         version = latest if version is None else version

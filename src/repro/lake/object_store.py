@@ -19,7 +19,7 @@ import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 
 class PutIfAbsentError(Exception):
@@ -350,3 +350,184 @@ class InMemoryObjectStore(ObjectStore):
             if key not in self._data:
                 raise ObjectNotFoundError(key)
             return len(self._data[key])
+
+
+class InjectedFault(IOError):
+    """The error a firing :class:`FaultRule` raises (distinguishable from
+    real I/O failures in test assertions)."""
+
+
+@dataclass
+class FaultRule:
+    """One deterministic failure in a :class:`FaultInjectingObjectStore`.
+
+    Fires on matching operations number ``nth`` .. ``nth + count - 1``
+    (1-based, counted per rule across the wrapper's lifetime). ``key``
+    is a substring filter on the object key (None matches every key; for
+    ``list`` it matches the prefix argument). Actions:
+
+    * ``"raise"`` — raise :class:`InjectedFault` *before* the operation
+      has any effect (a request that never reached the store);
+    * ``"raise-after"`` — apply the operation fully, then raise (a lost
+      acknowledgement: the classic ambiguous-commit failure);
+    * ``"partial"`` — ``put`` only: store the first
+      ``int(len(data) * partial_frac)`` bytes, then raise (a torn upload).
+      Conditional puts (``if_absent=True``) are the store's atomic commit
+      primitive — real object stores never tear them — so a partial rule
+      on one degrades to ``"raise"`` (no effect);
+    * ``"notfound"`` — ``get``/``head`` raise
+      :class:`ObjectNotFoundError` despite the key existing (HEAD-after-PUT
+      eventual consistency);
+    * ``"latency"`` — charge ``latency_s`` extra seconds (virtual when the
+      inner store has a virtual-clock :class:`LatencyModel`, a real sleep
+      otherwise), then proceed normally.
+    """
+
+    op: str                       # "put" | "get" | "head" | "delete" | "list"
+    action: str = "raise"
+    key: Optional[str] = None
+    nth: int = 1
+    count: int = 1
+    latency_s: float = 0.0
+    partial_frac: float = 0.5
+    seen: int = field(default=0, repr=False)   # matching ops observed so far
+
+    def matches(self, op: str, key: str) -> bool:
+        return op == self.op and (self.key is None or self.key in key)
+
+    @property
+    def exhausted(self) -> bool:
+        """Whether this rule can never fire again."""
+        return self.seen >= self.nth + self.count - 1
+
+
+class FaultInjectingObjectStore(ObjectStore):
+    """Wraps any :class:`ObjectStore` with deterministic failure schedules.
+
+    The reusable crash-testing harness: tests hand it a list of
+    :class:`FaultRule` and drive the writer under test until a rule fires —
+    "kill the writer after the 3rd data put", "lose the ack of the commit
+    put", "tear the 2nd upload halfway". Every operation (faulted or not)
+    is appended to ``op_log`` as ``(op, key)`` so assertions can reconstruct
+    exactly what reached the store.
+
+    Unknown attributes delegate to the wrapped store (``latency``, ``root``,
+    ``_data``...), and the io-cache identity token is shared with the inner
+    instance, so upload guards, leases, and block-cache entries key to the
+    same physical store whether a component holds the wrapper or the
+    wrapped instance.
+    """
+
+    def __init__(self, inner: ObjectStore,
+                 rules: Optional[List[FaultRule]] = None):
+        self.inner = inner
+        self.rules: List[FaultRule] = list(rules or ())
+        self.op_log: List[Tuple[str, str]] = []
+        self.injected = 0
+        self._fault_lock = threading.Lock()
+
+    def __getattr__(self, name: str):
+        if name == "inner":
+            raise AttributeError(name)
+        if name == "_io_cache_token":
+            # force the inner store to own the token, then mirror it: both
+            # handles must resolve to one store_scope / lease scope
+            from .io import _store_token
+            tok = _store_token(self.inner)
+            self._io_cache_token = tok
+            return tok
+        return getattr(self.inner, name)
+
+    def add_rule(self, rule: FaultRule) -> FaultRule:
+        """Arm one more rule (occurrence counting starts now)."""
+        with self._fault_lock:
+            self.rules.append(rule)
+        return rule
+
+    def clear_rules(self) -> None:
+        """Disarm every rule (the op log and counters are kept)."""
+        with self._fault_lock:
+            self.rules = []
+
+    def _check(self, op: str, key: str) -> Optional[FaultRule]:
+        """Record the op; return the first rule due to fire on it."""
+        with self._fault_lock:
+            self.op_log.append((op, key))
+            firing = None
+            for rule in self.rules:
+                if not rule.matches(op, key):
+                    continue
+                rule.seen += 1
+                if firing is None and \
+                        rule.nth <= rule.seen < rule.nth + rule.count:
+                    firing = rule
+            if firing is not None:
+                self.injected += 1
+            return firing
+
+    def _spike(self, seconds: float) -> None:
+        lm = getattr(self.inner, "latency", None)
+        if lm is not None and getattr(lm, "virtual_clock", False):
+            # model the spike as extra wire time: one request whose
+            # transfer takes exactly `seconds` on top of the RTT
+            lm.charge(int(seconds * lm.bandwidth_bps / 8))
+        else:
+            time.sleep(seconds)
+
+    def put(self, key: str, data: bytes, *, if_absent: bool = False) -> None:
+        rule = self._check("put", key)
+        if rule is not None:
+            if rule.action == "raise-after":
+                self.inner.put(key, data, if_absent=if_absent)
+                raise InjectedFault(f"lost ack of put {key!r}")
+            if rule.action == "partial" and not if_absent:
+                self.inner.put(key, data[:int(len(data) * rule.partial_frac)])
+                raise InjectedFault(f"torn put {key!r}")
+            if rule.action == "latency":
+                self._spike(rule.latency_s)
+            else:
+                raise InjectedFault(f"injected fault on put {key!r}")
+        self.inner.put(key, data, if_absent=if_absent)
+
+    def get(self, key: str) -> bytes:
+        rule = self._check("get", key)
+        if rule is not None:
+            if rule.action == "notfound":
+                raise ObjectNotFoundError(key)
+            if rule.action == "latency":
+                self._spike(rule.latency_s)
+            else:
+                raise InjectedFault(f"injected fault on get {key!r}")
+        return self.inner.get(key)
+
+    def head(self, key: str) -> int:
+        rule = self._check("head", key)
+        if rule is not None:
+            if rule.action == "notfound":
+                raise ObjectNotFoundError(key)
+            if rule.action == "latency":
+                self._spike(rule.latency_s)
+            else:
+                raise InjectedFault(f"injected fault on head {key!r}")
+        return self.inner.head(key)
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        rule = self._check("list", prefix)
+        if rule is not None:
+            if rule.action == "latency":
+                self._spike(rule.latency_s)
+            else:
+                raise InjectedFault(f"injected fault on list {prefix!r}")
+        return self.inner.list(prefix)
+
+    def delete(self, key: str) -> None:
+        rule = self._check("delete", key)
+        if rule is not None:
+            if rule.action == "raise-after":
+                self.inner.delete(key)
+                raise InjectedFault(f"lost ack of delete {key!r}")
+            if rule.action == "latency":
+                self._spike(rule.latency_s)
+            else:
+                raise InjectedFault(f"injected fault on delete {key!r}")
+        self.inner.delete(key)

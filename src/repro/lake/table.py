@@ -286,6 +286,39 @@ def _output_compression(adds: List[Dict[str, Any]],
     return spec, itemsize
 
 
+def approx_row_bytes(columns: Dict[str, Any], rows: int) -> float:
+    """Estimated bytes per row of a column dict (payload bytes only).
+
+    What :meth:`DeltaTable.append_split` sizes part files with: ndarray
+    columns count their buffer, object columns count per-item bytes/array
+    sizes (8 bytes for anything else, e.g. a dtype string).
+    """
+    total = 0
+    for v in columns.values():
+        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
+            total += v.nbytes
+        else:
+            for item in v:
+                if isinstance(item, (bytes, bytearray)):
+                    total += len(item)
+                elif isinstance(item, np.ndarray):
+                    total += item.nbytes
+                else:
+                    total += 8
+    return total / max(rows, 1)
+
+
+def slice_columns(columns: Dict[str, Any], lo: int, hi: int) -> Dict[str, Any]:
+    """Row window ``[lo, hi)`` of a column dict (ndarray views, list copies)."""
+    out = {}
+    for k, v in columns.items():
+        if isinstance(v, np.ndarray) and v.dtype.kind != "O":
+            out[k] = v[lo:hi]
+        else:
+            out[k] = list(v[lo:hi])
+    return out
+
+
 def _merge_batches(batches: List[Dict[str, Any]]) -> Dict[str, Any]:
     if not batches:
         return {}
@@ -446,6 +479,38 @@ class DeltaTable:
         if commit:
             self.log.commit([{"add": add}], op="WRITE")
         return add
+
+    def append_split(self, columns: Dict[str, Any], *,
+                     target_bytes: int,
+                     partition_values: Optional[Dict[str, str]] = None,
+                     guard: Optional[UploadGuard] = None,
+                     compression: Union[None, str, CompressionSpec] = None,
+                     shuffle_itemsize: int = 1,
+                     cas: Optional[Any] = None,
+                     dedup_seen: Optional[Set[str]] = None,
+                     ) -> List[Dict[str, Any]]:
+        """Seal ``columns`` into ~``target_bytes`` part files (no commit).
+
+        The partial-chunk sealing step shared by the tensor store's batch
+        write path and the streaming ingest writer: rows are windowed into
+        files of roughly ``target_bytes`` payload (estimated via
+        :func:`approx_row_bytes`), each uploaded through :meth:`append`
+        with ``commit=False`` — so every flag (``guard``, ``compression``,
+        ``cas``/``dedup_seen`` content dedup) applies per sealed file.
+        Returns the add-actions in row order; the caller commits them via
+        :meth:`commit_adds`.
+        """
+        rows = len(next(iter(columns.values())))
+        per_file = max(1, int(target_bytes //
+                              max(approx_row_bytes(columns, rows), 1)))
+        adds: List[Dict[str, Any]] = []
+        for lo in range(0, rows, per_file):
+            adds.append(self.append(
+                slice_columns(columns, lo, min(rows, lo + per_file)),
+                commit=False, guard=guard, compression=compression,
+                shuffle_itemsize=shuffle_itemsize, cas=cas,
+                dedup_seen=dedup_seen, partition_values=partition_values))
+        return adds
 
     def commit_adds(self, adds: List[Dict[str, Any]], *, removes: Sequence[str] = (),
                     op: str = "WRITE",
@@ -745,6 +810,28 @@ class DeltaTable:
                 _condemned.setdefault(ikey, set()).update(condemned)
         try:
             spared: Set[str] = set()
+            if not dry_run and condemned:
+                # close the commit/vacuum race: a writer that uploaded
+                # before the physical listing may have committed — and
+                # closed its guard — after the snapshot replay above but
+                # before the condemn check. A guard closed by that check
+                # means its commit already landed, so re-listing the log
+                # here surfaces every such version; anything it references
+                # is live, not an orphan.
+                latest_now = self.log.refresh_latest()
+                for v in range(max(retained) + 1, latest_now + 1):
+                    for path, a in self.log.snapshot(v).files.items():
+                        live.add(a.get("physPath") or path)
+                        db = a.get("deltaBase")
+                        if db and db.startswith(prefix):
+                            live.add(db[len(prefix):])
+                fresh = {rel for rel in condemned if rel in live}
+                if fresh:
+                    condemned -= fresh
+                    with _inflight_lock:
+                        s = _condemned.get(ikey)
+                        if s is not None:
+                            s -= fresh
             for key, rel in doomed:
                 if not dry_run and rel is not None and rel not in condemned:
                     spared.add(rel)

@@ -1,0 +1,458 @@
+"""Streaming ingest: watermark commits, crash-consistent recovery, and the
+fault-injection harness.
+
+The crash tests drive :class:`~repro.data.ingest.IngestWriter` into a
+deterministic failure at every seam of a flush (mid-seal, after upload /
+before commit, lost commit ack, mid-commit-retry) via
+:class:`~repro.lake.FaultInjectingObjectStore`, then assert the headline
+correctness claim: the table is NEVER torn — a killed writer leaves only
+invisible orphans that vacuum reclaims exactly, and a restarted writer
+resumes from the committed row count without duplicating a row.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.store import DeltaTensorStore
+from repro.data.stream import StreamLoader
+from repro.lake import (FaultInjectingObjectStore, FaultRule,
+                        InjectedFault, InMemoryObjectStore, LatencyModel)
+
+from ._hypothesis_compat import given, settings, st
+
+WIDTH = 4
+
+
+def rows_for(lo, hi, width=WIDTH, dtype=np.int32):
+    """Distinct, self-describing sample rows: row i holds i*width..i*width+w."""
+    return np.arange(lo * width, hi * width, dtype=dtype).reshape(-1, width)
+
+
+def fresh(shards=1, **kw):
+    obj = InMemoryObjectStore()
+    return obj, DeltaTensorStore(obj, "ts", shards=shards, **kw)
+
+
+def faulty_fresh(**kw):
+    faulty = FaultInjectingObjectStore(InMemoryObjectStore())
+    return faulty, DeltaTensorStore(faulty, "ts", **kw)
+
+
+def part_keys(obj):
+    """Every stored data-file key (any shard), by the part- naming scheme."""
+    return {k for k in obj.list("")
+            if k.rsplit("/", 1)[-1].startswith("part-")}
+
+
+# -- watermark semantics ------------------------------------------------------
+
+
+def test_row_watermark_commits_and_close_flushes_the_tail():
+    obj, store = fresh()
+    w = store.ingest("t", watermark_rows=4)
+    versions = [w.append_rows(rows_for(i, i + 1)) for i in range(10)]
+    # exactly two watermark commits (at rows 4 and 8), buffered tail of 2
+    assert [v is not None for v in versions].count(True) == 2
+    assert w.rows_pending == 2 and w.rows_committed == 8
+    w.close()
+    assert w.rows_committed == 10 and w.rows_pending == 0
+    assert np.array_equal(store.get("t"), rows_for(0, 10))
+    with pytest.raises(RuntimeError):
+        w.append_rows(rows_for(0, 1))
+
+
+def test_time_watermark_commits_via_poll():
+    clock = [0.0]
+    obj, store = fresh()
+    w = store.ingest("t", watermark_rows=10_000, watermark_s=5.0,
+                     clock=lambda: clock[0])
+    w.append_rows(rows_for(0, 2))
+    assert w.poll() is None and w.rows_committed == 0
+    clock[0] = 6.0
+    assert w.poll() is not None
+    assert w.rows_committed == 2
+    # appends also honor the expired time watermark
+    w.append_rows(rows_for(2, 3))
+    clock[0] = 20.0
+    assert w.append_rows(rows_for(3, 4)) is not None
+    assert np.array_equal(store.get("t"), rows_for(0, 4))
+    w.close()
+
+
+def test_append_validates_shape_and_dtype():
+    obj, store = fresh()
+    with store.ingest("t", watermark_rows=2) as w:
+        w.append_rows(rows_for(0, 2))
+        with pytest.raises(ValueError):
+            w.append_rows(np.zeros((1, WIDTH + 1), np.int32))
+        with pytest.raises(ValueError):
+            w.append_rows(np.zeros((1, WIDTH), np.float64))
+        with pytest.raises(ValueError):
+            w.append_rows(np.int32(3))
+        assert w.append_rows(np.zeros((0, WIDTH), np.int32)) is None
+
+
+def test_ingest_grows_a_put_tensor_and_slices_cross_the_boundary():
+    obj, store = fresh(shards=2)
+    store.put(rows_for(0, 6), tensor_id="t", layout="ftsf")
+    with store.ingest("t", watermark_rows=4) as w:
+        assert w.row_count == 6
+        w.append_rows(rows_for(6, 10))
+    assert np.array_equal(store.get("t"), rows_for(0, 10))
+    # a slice window spanning old and ingested files prunes + decodes right
+    assert np.array_equal(store.get_slice("t", [(4, 9)]), rows_for(0, 10)[4:9])
+
+
+def test_ingest_rejects_non_row_chunked_layouts():
+    obj, store = fresh()
+    store.put(np.arange(64.0).reshape(8, 8), tensor_id="c", layout="csf")
+    with pytest.raises(ValueError):
+        store.ingest("c")
+
+
+def test_deduped_ingest_chunks_commit_as_physpath_references():
+    obj, store = fresh()  # dedup on by default
+    payload = rows_for(0, 8)
+    with store.ingest("a", watermark_rows=8) as w:
+        w.append_rows(payload)
+    with store.ingest("b", watermark_rows=8) as w:
+        w.append_rows(payload)
+    entry = store.catalog().entry("b")
+    assert entry.chunk_adds and all(a.get("physPath") for a in entry.chunk_adds)
+    assert np.array_equal(store.get("b"), payload)
+    # deleting the alias never strands the original's bytes
+    store.delete("b")
+    store.vacuum()
+    assert np.array_equal(store.get("a"), payload)
+
+
+def test_spill_to_index_stays_correct_past_the_threshold():
+    obj, store = fresh(spill_threshold=8)
+    with store.ingest("t", watermark_rows=2, target_file_bytes=32) as w:
+        for i in range(0, 12, 2):
+            w.append_rows(rows_for(i, i + 2))
+    assert any("/_catalog/" in k for k in obj.list("")), \
+        "ingest commits past the threshold must spill a catalog index"
+    cold = DeltaTensorStore(obj, "ts", spill_threshold=8)
+    assert np.array_equal(cold.get("t"), rows_for(0, 12))
+    assert cold.catalog_stats["index_loads"] >= 1
+
+
+# -- snapshot isolation / reader handoff --------------------------------------
+
+
+def test_pinned_reader_is_isolated_and_reopen_picks_up_new_rows():
+    obj, store = fresh(shards=2)
+    store.put(rows_for(0, 8), tensor_id="t", layout="ftsf")
+    loader = StreamLoader(store, "t", batch_size=4, epochs=1, seed=3)
+    before = {b["step"]: b["data"].copy() for b in loader}
+    assert len(before) == 2  # 2 batches of 4
+
+    with store.ingest("t", watermark_rows=4) as w:
+        w.append_rows(rows_for(8, 16))
+    # the pinned loader replays byte-identically after the ingest commits
+    loader.seek(0, 0)
+    again = {b["step"]: b["data"] for b in loader}
+    assert before.keys() == again.keys()
+    for step, data in before.items():
+        assert np.array_equal(data, again[step])
+    assert loader.steps_per_epoch == 2
+
+    reopened = loader.reopen()
+    assert loader.closed and not reopened.closed
+    assert reopened.steps_per_epoch == 4  # 16 rows now owned
+    seen = np.sort(np.concatenate([b["samples"] for b in reopened]))
+    assert np.array_equal(seen, np.arange(16))
+    reopened.close()
+
+
+# -- crash seams --------------------------------------------------------------
+
+
+def crashed_flush(store, faulty, rule, *, n_rows=6, tid="t",
+                  target_file_bytes=64):
+    """Drive one writer into `rule` during its first flush; return the
+    writer and the set of orphan keys the crash left behind."""
+    before = part_keys(faulty)
+    w = store.ingest(tid, watermark_rows=n_rows,
+                     target_file_bytes=target_file_bytes)
+    w.append_rows(rows_for(0, n_rows - 1))
+    faulty.add_rule(rule)
+    with pytest.raises(InjectedFault):
+        w.append_rows(rows_for(n_rows - 1, n_rows))  # trips the watermark
+    faulty.clear_rules()
+    return w, part_keys(faulty) - before
+
+
+@pytest.mark.parametrize("seam,rule", [
+    # the writer dies after uploading data files, before the commit put
+    ("before-commit", FaultRule(op="put", key="_delta_log", action="raise")),
+    # the writer dies halfway through sealing (2nd data-file upload fails)
+    ("mid-seal", FaultRule(op="put", key="part-", nth=2, action="raise")),
+    # a data-file upload is torn: half the bytes land, then the writer dies
+    ("torn-upload", FaultRule(op="put", key="part-", nth=2, action="partial")),
+])
+def test_crash_seams_never_tear_and_vacuum_reclaims_exactly(seam, rule):
+    faulty, store = faulty_fresh()
+    w, orphans = crashed_flush(store, faulty, rule)
+    assert orphans, seam
+
+    # 1) never torn: the table is fully readable and shows no partial flush
+    assert store.list_tensors() == []
+    assert store.tables[0].snapshot().files == {}
+
+    # 2) vacuum reclaims exactly the crash's orphans (guard closed on exit)
+    res = store.vacuum()
+    assert set(res[0].deleted_paths) == \
+        {k.split("/", 1)[1] for k in orphans}
+    assert part_keys(faulty) == set()
+
+    # 3) a restarted writer resumes from the committed row count (0 here):
+    # the producer replays its uncommitted rows, nothing duplicates
+    w2 = store.ingest("t", watermark_rows=4)
+    assert w2.row_count == 0
+    w2.append_rows(rows_for(w2.row_count, 6))
+    w2.close()
+    assert np.array_equal(store.get("t"), rows_for(0, 6))
+
+
+def test_lost_commit_ack_is_detected_not_double_ingested():
+    faulty, store = faulty_fresh()
+    w = store.ingest("t", watermark_rows=3)
+    w.append_rows(rows_for(0, 3))
+    # the NEXT commit put lands but its acknowledgement is lost
+    faulty.add_rule(FaultRule(op="put", key="_delta_log",
+                              action="raise-after"))
+    v = w.append_rows(rows_for(3, 6))
+    assert v is not None  # flush recognized its own landed commit
+    assert w.rows_committed == 6
+    w.close()
+    assert np.array_equal(store.get("t"), rows_for(0, 6))
+    assert store.tables[0].version() == v
+
+
+def test_crash_mid_commit_retry_after_conflict():
+    faulty, store = faulty_fresh()
+    w1 = store.ingest("t", watermark_rows=4)
+    w2 = store.ingest("t", watermark_rows=4)
+    w1.append_rows(rows_for(0, 4))          # lands rows 0..3
+    before = part_keys(faulty)
+    # w2 stages rows at base 0, conflicts with w1, and dies while
+    # re-sealing at the rebased row count (its 2nd upload generation)
+    faulty.add_rule(FaultRule(op="put", key="part-", nth=4, action="raise"))
+    with pytest.raises(InjectedFault):
+        w2.append_rows(rows_for(100, 104))
+    faulty.clear_rules()
+    assert w2.conflicts == 1 and w2.reencodes == 1
+
+    # never torn: only w1's flush is visible
+    assert np.array_equal(store.get("t"), rows_for(0, 4))
+    # both abandoned upload generations are orphans; vacuum reclaims all
+    orphans = part_keys(faulty) - before
+    assert len(orphans) >= 3
+    res = store.vacuum()
+    assert set(res[0].deleted_paths) >= \
+        {k.split("/", 1)[1] for k in orphans}
+    assert np.array_equal(store.get("t"), rows_for(0, 4))
+
+    # the restarted writer resumes after w1's committed rows
+    w3 = store.ingest("t", watermark_rows=4)
+    assert w3.row_count == 4
+    w3.append_rows(rows_for(100, 104))
+    w3.close()
+    assert np.array_equal(store.get("t")[4:], rows_for(100, 104))
+
+
+def test_conflict_on_unrelated_tensor_is_a_cheap_retry():
+    obj, store = fresh()  # one shard: both tensors share the commit domain
+    w_a = store.ingest("a", watermark_rows=4)
+    w_b = store.ingest("b", watermark_rows=4)
+    w_a.append_rows(rows_for(0, 4))   # moves the fence under w_b
+    w_b.append_rows(rows_for(50, 54))
+    assert w_b.conflicts == 1 and w_b.reencodes == 0, \
+        "an unrelated commit must not force a re-upload"
+    assert np.array_equal(store.get("a"), rows_for(0, 4))
+    assert np.array_equal(store.get("b"), rows_for(50, 54))
+    assert store.commit_stats["conflicts"] == store.commit_stats["retries"]
+    w_a.close()
+    w_b.close()
+
+
+def test_two_writers_one_tensor_interleave_without_losing_rows():
+    obj, store = fresh()
+    w1 = store.ingest("t", watermark_rows=2)
+    w2 = store.ingest("t", watermark_rows=2)
+    for i in range(0, 8, 2):
+        (w1 if i % 4 == 0 else w2).append_rows(rows_for(i, i + 2))
+    w1.close()
+    w2.close()
+    got = store.get("t")
+    assert got.shape == (8, WIDTH)
+    # every appended row survives exactly once (order = commit order)
+    assert sorted(map(tuple, got)) == sorted(map(tuple, rows_for(0, 8)))
+    store.vacuum()
+    assert store.get("t").shape == (8, WIDTH)
+
+
+# -- property test: arbitrary interleavings -----------------------------------
+
+
+def _run_ingest_interleaving(ops):
+    obj = InMemoryObjectStore()
+    store = DeltaTensorStore(obj, "ts", shards=2)
+    w = store.ingest("t", watermark_rows=4, target_file_bytes=128)
+    appended = [0]
+    pins = []  # (open TensorRef, frozen copy of what it read)
+    try:
+        for op, arg in ops:
+            if op == "append":
+                k = (arg % 3) + 1
+                w.append_rows(rows_for(appended[0], appended[0] + k))
+                appended[0] += k
+            elif op == "flush":
+                w.flush()
+            elif op == "reader":
+                if w.rows_committed:
+                    ref = store.open("t")
+                    pins.append((ref, ref.read().copy()))
+            elif op == "vacuum":
+                store.vacuum()
+        w.close()
+
+        # every pinned read is byte-identical after any later appends,
+        # watermark commits, and vacuums
+        for ref, frozen in pins:
+            assert np.array_equal(ref.read(), frozen)
+        # the final row set is exact: every appended row, exactly once,
+        # in append order
+        if appended[0]:
+            assert np.array_equal(store.get("t"), rows_for(0, appended[0]))
+        store.vacuum()
+        if appended[0]:
+            assert np.array_equal(store.get("t"), rows_for(0, appended[0]))
+    finally:
+        for ref, _ in pins:
+            ref.close()
+
+
+_OPS = st.lists(st.tuples(st.sampled_from(["append", "flush", "reader",
+                                           "vacuum"]),
+                          st.integers(min_value=0, max_value=7)),
+                max_size=24)
+
+
+@settings(max_examples=int(os.environ.get("REPRO_HYPOTHESIS_EXAMPLES", "25")),
+          deadline=None)
+@given(ops=_OPS)
+def test_ingest_interleavings_keep_pinned_reads_and_final_rows_exact(ops):
+    _run_ingest_interleaving(ops)
+
+
+@pytest.mark.parametrize("ops", [
+    # commit, pin a reader, keep ingesting, vacuum under the pin
+    [("append", 3), ("flush", 0), ("reader", 0), ("append", 2),
+     ("flush", 0), ("vacuum", 0), ("append", 1), ("vacuum", 0)],
+    # vacuum between every step, reader pinned mid-stream
+    [("append", 0), ("vacuum", 0), ("flush", 0), ("vacuum", 0),
+     ("reader", 0), ("append", 2), ("vacuum", 0), ("flush", 0),
+     ("vacuum", 0)],
+    # watermark-triggered commits only (no explicit flush), two pins
+    [("append", 2), ("append", 2), ("reader", 0), ("append", 2),
+     ("append", 2), ("reader", 0), ("vacuum", 0)],
+])
+def test_ingest_fixed_interleavings(ops):
+    # deterministic fallback for environments without hypothesis
+    _run_ingest_interleaving(ops)
+
+
+# -- concurrency stress -------------------------------------------------------
+
+
+def test_concurrent_ingest_readers_and_compact_stress():
+    """4 threaded ingest writers + 2 StreamLoader readers + periodic
+    compact/vacuum on a 4-shard store, run for 200 virtual-clock seconds:
+    zero lost rows, zero reader errors, every commit conflict retried."""
+    lm = LatencyModel(rtt_s=0.5, virtual_clock=True, parallelism=4,
+                      occupancy_scale=0.001)
+    obj = InMemoryObjectStore(latency=lm)
+    store = DeltaTensorStore(obj, "ts", shards=4)
+    tids = [f"w{i}" for i in range(4)]
+    counts = {t: 0 for t in tids}
+
+    def tag(i, t):
+        # writer i's row t: a constant row (torn rows would show mixed
+        # values), unique across writers
+        return np.full((1, WIDTH), i * 1_000_000 + t, dtype=np.int64)
+
+    # pre-phase: every tensor exists with enough rows for a batch
+    for i, t in enumerate(tids):
+        with store.ingest(t, watermark_rows=8) as w:
+            for _ in range(8):
+                w.append_rows(tag(i, counts[t]))
+                counts[t] += 1
+
+    stop = threading.Event()
+    errors = []
+    batches = [0]
+
+    def writer(i):
+        t = tids[i]
+        try:
+            w = store.ingest(t, watermark_rows=8)
+            flushes = 0
+            while lm.elapsed_s < 200.0 and flushes < 12:
+                for _ in range(8):
+                    w.append_rows(tag(i, counts[t]))
+                    counts[t] += 1
+                flushes += 1
+            w.close()
+        except Exception as e:  # pragma: no cover - the assertion payload
+            errors.append(("writer", i, e))
+
+    def reader(j):
+        try:
+            loader = StreamLoader(store, tids, batch_size=8, epochs=1,
+                                  seed=j, clock=lambda: lm.elapsed_s)
+            while not stop.is_set():
+                for b in loader:
+                    data = np.asarray(b["data"])
+                    # rows are never torn: each sample row is constant
+                    assert (data == data[:, :1]).all()
+                    batches[0] += 1
+                    if stop.is_set():
+                        break
+                loader = loader.reopen()
+            loader.close()
+        except Exception as e:  # pragma: no cover - the assertion payload
+            errors.append(("reader", j, e))
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    threads += [threading.Thread(target=reader, args=(j,)) for j in range(2)]
+    for th in threads:
+        th.start()
+    # maintenance loop on the main thread: compact + vacuum race the writers
+    while any(th.is_alive() for th in threads[:4]):
+        store.compact()
+        store.vacuum()
+        for th in threads[:4]:
+            th.join(timeout=0.05)
+    stop.set()
+    for th in threads:
+        th.join(timeout=60)
+    assert not errors, errors
+    assert batches[0] > 0
+
+    # zero lost rows: every writer's appends are all present, exactly once
+    for i, t in enumerate(tids):
+        got = store.get(t)
+        assert got.shape == (counts[t], WIDTH), t
+        want = np.arange(counts[t], dtype=np.int64) + i * 1_000_000
+        assert np.array_equal(np.sort(got[:, 0]), want), t
+    # commit conflicts were all absorbed by retries, none escaped
+    assert store.commit_stats["conflicts"] == store.commit_stats["retries"]
+    store.vacuum()
+    for t in tids:
+        assert store.get(t).shape[0] == counts[t]

@@ -160,6 +160,31 @@ def test_log_crash_before_commit_invisible():
     assert res.files_deleted == 1 and res.bytes_reclaimed > 0
 
 
+def test_log_latest_version_cache_refreshes_on_miss():
+    # regression: a DeltaLog whose probe-forward latest cache went stale
+    # under an EXTERNAL writer must refresh on a version miss instead of
+    # raising ValueError for a commit that exists
+    from repro.lake import FaultInjectingObjectStore, FaultRule
+
+    inner = InMemoryObjectStore()
+    faulty = FaultInjectingObjectStore(inner)
+    writer = DeltaLog(inner, "tbl")
+    writer.commit([{"metaData": {}}])
+    reader = DeltaLog(faulty, "tbl")
+    assert reader.latest_version() == 0
+    v1 = writer.commit([{"add": {"path": "f", "size": 1, "stats": {}}}])
+    # eventual consistency: the reader's forward head probes 404, so its
+    # cached latest stays stale at 0...
+    faulty.add_rule(FaultRule(op="head", key="_delta_log",
+                              action="notfound", count=2))
+    assert reader.latest_version() == 0
+    # ...but an explicit request for the missed version invalidates the
+    # cache and replays the commit
+    snap = reader.snapshot(v1)
+    assert snap.version == v1 and set(snap.files) == {"f"}
+    assert reader.latest_version() >= v1
+
+
 # ---------------------------------------------------------------------------
 # delta table
 # ---------------------------------------------------------------------------
